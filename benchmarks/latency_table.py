@@ -1,0 +1,66 @@
+"""Paper Table (§IV-B): inference latency & speedup.
+
+The paper compares PS-side CPU (560 ms) vs FPGA fabric (109 ms) = 5.1x.
+Our analogue on this host: eager-ish float path vs the baked (constant-
+folded, XLA-fused) deployment path — the software/deployed split the paper
+measures — plus the TPU-roofline-derived estimate for the deployed path
+(the real target hardware this framework compiles for).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import deploy, smallnet
+from repro.data import synth_mnist
+
+# smallNet single-image inference cost (analytic)
+_FLOPS = (28 * 28 * 4 * 2          # conv1 2x2 MACs
+          + 14 * 14 * 4 * 2        # conv2
+          + 49 * 10 * 2)           # dense
+_BYTES = 28 * 28 * 4 + 510 * 4
+
+
+def run(trained):
+    rows = []
+    params = trained.params
+
+    # software path: un-jitted float inference (the paper's CPU side)
+    x = jnp.zeros((1, 28, 28, 1), jnp.float32)
+    with jax.disable_jit():
+        smallnet.forward(params, x)
+        t0 = time.perf_counter()
+        for _ in range(10):
+            smallnet.forward(params, x).block_until_ready()
+        sw = (time.perf_counter() - t0) / 10
+    rows.append(("latency/software_float_eager", sw * 1e6, "per image"))
+
+    # deployed path: weights baked as constants, fused program
+    baked = deploy.bake(smallnet.forward, params)
+    baked(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(100):
+        baked(x).block_until_ready()
+    hw = (time.perf_counter() - t0) / 100
+    rows.append(("latency/deployed_baked", hw * 1e6, "per image"))
+    rows.append(("latency/speedup", None,
+                 f"{sw / hw:.1f}x (paper: 5.1x)"))
+
+    # int8 deployed path
+    qp = smallnet.quantize_params_int8(params)
+    baked8 = deploy.bake(smallnet.forward_int8, qp)
+    baked8(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(100):
+        baked8(x).block_until_ready()
+    rows.append(("latency/deployed_int8", (time.perf_counter() - t0) / 100 * 1e6,
+                 "per image"))
+
+    # TPU v5e roofline estimate for the deployed conv pipeline
+    comp = _FLOPS / 197e12
+    mem = _BYTES / 819e9
+    rows.append(("latency/tpu_roofline_estimate", max(comp, mem) * 1e6,
+                 f"compute={comp*1e9:.1f}ns mem={mem*1e9:.1f}ns (bandwidth-bound)"))
+    return rows

@@ -1,0 +1,77 @@
+"""Render §Dry-run and §Roofline markdown tables from the sweep JSONs into
+EXPERIMENTS.md (between the *_TABLE_START/END markers).
+
+    PYTHONPATH=src python -m benchmarks.render_tables
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+HERE = pathlib.Path(__file__).resolve().parent
+EXP = HERE.parent / "EXPERIMENTS.md"
+
+
+def dryrun_table() -> str:
+    res = json.loads((HERE / "dryrun_results.json").read_text())
+    lines = ["| arch | shape | mesh | ok | peak GiB/dev | args GiB/dev | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for key in sorted(res):
+        v = res[key]
+        arch, shape, mesh = key.split("|")
+        if v.get("ok"):
+            m = v["memory"]
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | ✓ "
+                f"| {m['peak_estimate_per_device']/2**30:.2f} "
+                f"| {m['argument_bytes_per_device']/2**30:.2f} "
+                f"| {v.get('compile_seconds','')} |")
+        else:
+            lines.append(f"| {arch} | {shape} | {mesh} | ✗ {v.get('error','')[:40]} | | | |")
+    ok = sum(1 for v in res.values() if v.get("ok"))
+    lines.append(f"\n**{ok}/{len(res)} cells compile.**")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    res = json.loads((HERE / "roofline_results.json").read_text())
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
+             "| MODEL_FLOPS | useful | roofline frac | one-line bottleneck note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        "compute": "MXU-bound: raise via less remat recompute / int8 MXU",
+        "memory": "HBM-bound: int8 weights/KV halve the dominant reads",
+        "collective": "ICI-bound: AR->RS on SP boundaries + comm/compute overlap",
+    }
+    for key in sorted(res):
+        v = res[key]
+        if "error" in v:
+            lines.append(f"| {key} | ERROR {v['error'][:40]} |" + " |" * 8)
+            continue
+        arch, shape = key.split("|")
+        lines.append(
+            f"| {arch} | {shape} | {v['compute_s']:.3f} | {v['memory_s']:.4f} "
+            f"| {v['collective_s']:.3f} | **{v['dominant']}** "
+            f"| {v['model_flops_total']:.3g} | {v['useful_ratio']:.2f} "
+            f"| {v['roofline_fraction']:.3f} | {notes[v['dominant']]} |")
+    return "\n".join(lines)
+
+
+def inject(text: str, start: str, end: str, payload: str) -> str:
+    pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
+    return pat.sub(start + "\n" + payload + "\n" + end, text)
+
+
+def main():
+    t = EXP.read_text()
+    t = inject(t, "<!-- DRYRUN_TABLE_START -->", "<!-- DRYRUN_TABLE_END -->",
+               dryrun_table())
+    t = inject(t, "<!-- ROOFLINE_TABLE_START -->", "<!-- ROOFLINE_TABLE_END -->",
+               roofline_table())
+    EXP.write_text(t)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Roofline table: three terms per (arch x shape), single-pod production mesh.
+Reads benchmarks/roofline_results.json produced by
+`python -m repro.analysis.run_roofline` (512-device dry-run process)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+_HERE = pathlib.Path(__file__).resolve().parent
+
+
+def run():
+    rows = []
+    p = _HERE / "roofline_results.json"
+    if not p.exists():
+        rows.append(("roofline/missing", None,
+                     "run: PYTHONPATH=src python -m repro.analysis.run_roofline"))
+        return rows
+    res = json.loads(p.read_text())
+    for key, v in sorted(res.items()):
+        if "error" in v:
+            rows.append((f"roofline/{key}", None, f"ERROR {v['error'][:60]}"))
+            continue
+        rows.append((f"roofline/{key}", v["step_time_s"] * 1e6,
+                     f"dom={v['dominant']} comp={v['compute_s']*1e3:.1f}ms "
+                     f"mem={v['memory_s']*1e3:.1f}ms coll={v['collective_s']*1e3:.1f}ms "
+                     f"frac={v['roofline_fraction']:.3f} useful={v['useful_ratio']:.2f}"))
+    return rows

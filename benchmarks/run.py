@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table + the scale deliverables.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  accuracy_table  — paper §IV-C accuracy ladder + Qm.n degradation sweep
+  latency_table   — paper §IV-B software vs deployed latency / speedup
+  resource_table  — paper §IV-A resources/power analogues + per-arch HBM
+  roofline_table  — three-term roofline per (arch x shape), single pod
+"""
+import argparse
+import sys
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        us_s = f"{us:.2f}" if us is not None else ""
+        print(f"{name},{us_s},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller smallNet training run")
+    args = ap.parse_args()
+
+    from benchmarks import accuracy_table, latency_table, resource_table, roofline_table
+    from repro.core import deploy
+
+    print("name,us_per_call,derived")
+    trained = deploy.train_smallnet(
+        n_train=3000 if args.fast else 8000,
+        n_test=800 if args.fast else 2000,
+        epochs=8 if args.fast else 16)
+    rows, trained = accuracy_table.run(trained=trained,
+                                       n_test=800 if args.fast else 1500)
+    _emit(rows)
+    _emit(latency_table.run(trained))
+    _emit(resource_table.run(trained))
+    _emit(roofline_table.run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's entire pipeline in one script.
+
+Trains smallNet in float (the Keras counterpart), extracts + converts the
+weights to two's-complement fixed point, "bakes" them into the compiled
+program, and compares the accuracy ladder float -> PLAN -> fixed -> int8.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 16]
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import deploy, smallnet
+from repro.data import synth_mnist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--n-train", type=int, default=6000)
+    args = ap.parse_args()
+
+    print("== 1. train float smallNet (paper §III-A: Adam, batch 64) ==")
+    res = deploy.train_smallnet(n_train=args.n_train, n_test=1500,
+                                epochs=args.epochs)
+    print(f"   params={smallnet.param_count(res.params)} "
+          f"train_acc={res.train_acc:.4f} test_acc={res.test_acc:.4f}")
+
+    print("== 2. extract -> 2's-complement fixed point -> bake (§III-B) ==")
+    qfix = smallnet.quantize_params_fixed(res.params)
+    baked = deploy.bake(lambda q, x: smallnet.forward_fixed(q, x), qfix)
+    x, y = synth_mnist.make_dataset(512, seed=2)
+    pred = smallnet.predict(baked(jnp.asarray(x)))
+    print(f"   baked fixed-point accuracy: {float((pred == y).mean()):.4f}")
+
+    print("== 3. accuracy ladder (paper §IV-C: 93.47 -> 88.03 -> 81) ==")
+    for name, acc in deploy.evaluate_all_paths(res.params, n_test=1500).items():
+        print(f"   {name:24s} {acc:.4f}")
+
+    print("== 4. latency (paper §IV-B: 560 ms CPU -> 109 ms FPGA, 5.1x) ==")
+    sw = deploy.measure_latency(smallnet.forward, res.params)
+    print(f"   deployed-baked latency: {sw*1e3:.3f} ms/image on this host")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion")
+
+"""Roofline sweep: compile every single-pod cell, derive the three-term
+roofline from the compiled HLO, cache to benchmarks/roofline_results.json.
+
+    python -m repro.analysis.run_roofline [--arch A] [--shape S] [--force]
+"""
+import argparse
+import gc
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis.roofline import roofline_from_artifacts, to_dict
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.lowering import lower_cell, cell_report
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "roofline_results.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    res = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    mesh = make_production_mesh()
+    failures = 0
+    for arch in ARCH_IDS:
+        if args.arch and arch != args.arch:
+            continue
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            if args.shape and s.name != args.shape:
+                continue
+            if s.name == "long_500k" and not cfg.supports_long_context():
+                continue
+            key = f"{arch}|{s.name}"
+            if not args.force and key in res and "error" not in res[key]:
+                continue
+            t0 = time.time()
+            print(f"[roofline] {key} ...", flush=True)
+            try:
+                art = lower_cell(arch, s.name, mesh)
+                rep = cell_report(art)
+                r = roofline_from_artifacts(arch, s.name, art.compiled.as_text(),
+                                            rep.get("cost", {}), 256)
+                d = to_dict(r)
+                d["compile_seconds"] = round(time.time() - t0, 1)
+                d["peak_bytes_per_device"] = rep.get("memory", {}).get(
+                    "peak_estimate_per_device")
+                res[key] = d
+                print(f"[roofline] {key} dominant={d['dominant']} "
+                      f"step={d['step_time_s']*1e3:.1f}ms "
+                      f"frac={d['roofline_fraction']:.3f}", flush=True)
+                del art
+                gc.collect()
+            except Exception as e:
+                failures += 1
+                res[key] = {"error": f"{type(e).__name__}: {e}"}
+                traceback.print_exc(limit=3)
+            RESULTS.write_text(json.dumps(res, indent=1, sort_keys=True))
+    print(f"[roofline] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, get_config, list_archs

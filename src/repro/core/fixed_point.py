@@ -1,0 +1,201 @@
+"""Qm.n two's-complement fixed-point arithmetic, emulated bit-exactly in JAX.
+
+This is the paper's numerical substrate: smallNet stores weights/activations
+as 32-bit two's-complement fixed point ("aligning with the native word size
+of the Zynq architecture").  We emulate the same semantics on TPU/CPU:
+
+  * storage: int32, value = stored / 2**frac_bits
+  * multiply: full 32x32 -> 64-bit product computed via 16-bit limb
+    decomposition (JAX's default int is 32-bit; x64 is never enabled), then
+    an arithmetic right shift by frac_bits.  Overflow wraps (two's
+    complement), exactly like the FPGA datapath; optional saturation mode
+    mirrors DSP-slice saturating accumulators.
+  * add/sub: native int32, which wraps in XLA (defined two's-complement).
+
+The emulation is *bit-exact* for wraparound mode: every intermediate fits the
+documented limb ranges (proved in tests against a numpy int64 oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointConfig:
+    """Qm.n format: total_bits = 1 + m + n (sign + integer + fraction)."""
+    total_bits: int = 32
+    frac_bits: int = 16
+    saturate: bool = False          # False = wraparound (paper's 2's complement)
+    round_nearest: bool = True      # False = truncate (pure >> shift)
+
+    @property
+    def int_bits(self) -> int:
+        return self.total_bits - 1 - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def max_int(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def min_int(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+
+Q16_16 = FixedPointConfig(32, 16)
+Q8_8 = FixedPointConfig(16, 8)
+
+
+def _wrap_to_bits(x: jnp.ndarray, total_bits: int) -> jnp.ndarray:
+    """Truncate an int32 value to `total_bits` with sign extension (2's comp)."""
+    if total_bits == 32:
+        return x
+    shift = 32 - total_bits
+    return (x << shift) >> shift  # arithmetic shift sign-extends
+
+
+def to_fixed(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    """Float -> fixed. Out-of-range reals always saturate (ADC-style)."""
+    scaled = jnp.round(jnp.asarray(x, jnp.float32) * cfg.scale)
+    scaled = jnp.clip(scaled, float(cfg.min_int), float(cfg.max_int))
+    return _wrap_to_bits(scaled.astype(jnp.int32), cfg.total_bits)
+
+
+def from_fixed(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    return x.astype(jnp.float32) / cfg.scale
+
+
+def fixed_add(a: jnp.ndarray, b: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    s = a + b  # int32 wraps (two's complement) in XLA
+    if cfg.saturate:
+        # overflow iff operands share sign and result sign differs
+        ovf = (jnp.sign(a) == jnp.sign(b)) & (jnp.sign(s) != jnp.sign(a)) & (a != 0)
+        sat = jnp.where(a > 0, cfg.max_int, cfg.min_int).astype(jnp.int32)
+        s = jnp.where(ovf, sat, s)
+    return _wrap_to_bits(s, cfg.total_bits)
+
+
+def _full_mul_shift(a: jnp.ndarray, b: jnp.ndarray, shift: int,
+                    round_nearest: bool) -> jnp.ndarray:
+    """(a * b) >> shift on int32 inputs, exact, via 16-bit limb decomposition.
+
+    a*b = ah*bh*2^32 + (ah*bl + al*bh)*2^16 + al*bl, with
+      al, bl in [0, 2^16)  (unsigned low limbs)
+      ah, bh in [-2^15, 2^15)  (signed high limbs)
+    All partial products fit comfortably in (u)int32:
+      |ah*bl| <= 2^15 * (2^16-1) < 2^31,  al*bl < 2^32 (held in uint32).
+    The result is reduced mod 2^32 (wraparound), matching hardware.
+    Only shift == 16 is needed for Qx.16; generic shifts split into
+    (>>16 via limbs) then a final arithmetic shift.
+    """
+    assert 0 <= shift <= 31
+    au = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    bu = jax.lax.bitcast_convert_type(b, jnp.uint32)
+    al = au & jnp.uint32(0xFFFF)
+    bl = bu & jnp.uint32(0xFFFF)
+    ah = a >> 16  # arithmetic: signed high limb
+    bh = b >> 16
+    lo = al * bl                                    # uint32, exact
+    # cross terms: signed, fit in int32
+    cross = ah * jax.lax.bitcast_convert_type(bl, jnp.int32) \
+        + jax.lax.bitcast_convert_type(al, jnp.int32) * bh
+    # (a*b) >> 16, mod 2^32:
+    hi16 = jax.lax.bitcast_convert_type(lo >> 16, jnp.int32)
+    p16 = hi16 + cross + ((ah * bh) << 16)          # wraps mod 2^32 as intended
+    if shift == 16 and not round_nearest:
+        return p16
+    if round_nearest:
+        # rounding bit = bit (shift-1) of the full product
+        if shift >= 17:
+            rbit = (p16 >> (shift - 17)) & 1
+            return (p16 >> (shift - 16)) + rbit
+        elif shift == 16:
+            rbit = jax.lax.bitcast_convert_type((lo >> 15) & jnp.uint32(1), jnp.int32)
+            return p16 + rbit
+        else:  # shift < 16: recompute from limbs with smaller shift
+            # full product low 32 bits, mod 2^32
+            p0 = jax.lax.bitcast_convert_type(
+                lo + (jax.lax.bitcast_convert_type(cross, jnp.uint32) << 16), jnp.int32)
+            if shift == 0:
+                return p0
+            ubits = jax.lax.bitcast_convert_type(p0, jnp.uint32) >> shift
+            top = p16 << (16 - shift)               # bits from >>16 result
+            val = jax.lax.bitcast_convert_type(ubits, jnp.int32) | top
+            rbit = (p0 >> (shift - 1)) & 1
+            return val + rbit
+    else:
+        if shift > 16:
+            return p16 >> (shift - 16)
+        # shift < 16
+        p0 = jax.lax.bitcast_convert_type(
+            lo + (jax.lax.bitcast_convert_type(cross, jnp.uint32) << 16), jnp.int32)
+        if shift == 0:
+            return p0
+        ubits = jax.lax.bitcast_convert_type(p0, jnp.uint32) >> shift
+        top = p16 << (16 - shift)
+        return jax.lax.bitcast_convert_type(ubits, jnp.int32) | top
+
+
+def fixed_mul(a: jnp.ndarray, b: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    p = _full_mul_shift(a, b, cfg.frac_bits, cfg.round_nearest)
+    if cfg.saturate:
+        # f32 magnitude heuristic for the saturation decision (documented:
+        # exact wraparound is the default hardware-faithful mode).
+        approx = a.astype(jnp.float32) * b.astype(jnp.float32) / cfg.scale
+        p = jnp.where(approx > cfg.max_int, cfg.max_int,
+                      jnp.where(approx < cfg.min_int, cfg.min_int, p)).astype(jnp.int32)
+    return _wrap_to_bits(p, cfg.total_bits)
+
+
+def fixed_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    """Fixed-point (B, K) @ (K, N): per-element fixed mul, int32 accumulate.
+
+    Mirrors the paper's MAC array: each product is shifted back to Qm.n then
+    accumulated in the same word width (wraparound on overflow).
+    """
+    prods = fixed_mul(x[:, :, None], w[None, :, :], cfg)   # (B, K, N)
+    return _wrap_to_bits(jnp.sum(prods, axis=1, dtype=jnp.int32), cfg.total_bits)
+
+
+def fixed_sigmoid_plan(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
+    """PLAN (piecewise-linear approximation) sigmoid in fixed point.
+
+    The standard hardware sigmoid (Amin, Curtis & Hayes-Gill 1997), computable
+    with shifts and adds only:
+        |x| >= 5          -> 1
+        2.375 <= |x| < 5  -> 0.03125*|x| + 0.84375
+        1 <= |x| < 2.375  -> 0.125 *|x| + 0.625
+        0 <= |x| < 1      -> 0.25  *|x| + 0.5
+    and sigmoid(-x) = 1 - sigmoid(x).
+    """
+    f = cfg.frac_bits
+    ax = jnp.abs(x)
+    c5 = to_fixed(5.0, cfg)
+    c2375 = to_fixed(2.375, cfg)
+    c1 = to_fixed(1.0, cfg)
+    y = jnp.where(
+        ax >= c5, to_fixed(1.0, cfg) if cfg.int_bits >= 1 else cfg.max_int,
+        jnp.where(
+            ax >= c2375, (ax >> 5) + to_fixed(0.84375, cfg),
+            jnp.where(ax >= c1, (ax >> 3) + to_fixed(0.625, cfg),
+                      (ax >> 2) + to_fixed(0.5, cfg))))
+    one = to_fixed(1.0, cfg) if cfg.int_bits >= 1 else cfg.max_int
+    return jnp.where(x < 0, one - y, y).astype(jnp.int32)
+
+
+def sigmoid_plan_f32(x: jnp.ndarray) -> jnp.ndarray:
+    """Float reference of the PLAN sigmoid (same breakpoints)."""
+    ax = jnp.abs(x)
+    y = jnp.where(ax >= 5.0, 1.0,
+                  jnp.where(ax >= 2.375, 0.03125 * ax + 0.84375,
+                            jnp.where(ax >= 1.0, 0.125 * ax + 0.625,
+                                      0.25 * ax + 0.5)))
+    return jnp.where(x < 0, 1.0 - y, y)

@@ -1,0 +1,190 @@
+"""Post-training quantization — the paper's train→extract→bake flow, generalized.
+
+smallNet trains in float (Keras), extracts weights, converts them to
+two's-complement fixed point, and bakes them into the fabric.  On TPU the
+native cheap multiplier is int8 (MXU int8 matmuls run at 2x the bf16 rate),
+so the framework's production path is symmetric int8 with per-channel weight
+scales and int32 accumulation; the Qm.n path in `fixed_point.py` remains the
+paper-faithful 32-bit mode.
+
+Supports:
+  * per-tensor / per-channel symmetric weight quantization (absmax or
+    percentile calibration)
+  * static activation calibration from a calibration batch
+  * whole-pytree quantization of any model's linear weights (`quantize_tree`)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    per_channel: bool = True       # scale per output channel (last weight dim)
+    percentile: float = 100.0      # 100 = absmax; <100 clips outliers
+    symmetric: bool = True         # symmetric (2's complement) only, like the paper
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantTensor:
+    """int values + float scale; value = q * scale."""
+    q: jnp.ndarray           # int8 (or int32 for the fixed-point path)
+    scale: jnp.ndarray       # f32, broadcastable against q
+
+    def dequantize(self) -> jnp.ndarray:
+        return self.q.astype(jnp.float32) * self.scale
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _calib_scale(x: jnp.ndarray, cfg: QuantConfig, axis) -> jnp.ndarray:
+    ax = jnp.abs(x.astype(jnp.float32))
+    if cfg.percentile >= 100.0:
+        m = jnp.max(ax, axis=axis, keepdims=True)
+    else:
+        m = jnp.percentile(ax, cfg.percentile, axis=axis, keepdims=True)
+    return jnp.maximum(m, 1e-8) / cfg.qmax
+
+
+def quantize(x: jnp.ndarray, cfg: QuantConfig = QuantConfig()) -> QuantTensor:
+    """Symmetric quantization. Per-channel scales are over the LAST dim."""
+    if cfg.per_channel and x.ndim >= 2:
+        axis = tuple(range(x.ndim - 1))
+    else:
+        axis = tuple(range(x.ndim))
+    scale = _calib_scale(x, cfg, axis)
+    q = jnp.clip(jnp.round(x / scale), -cfg.qmax - 1, cfg.qmax).astype(jnp.int8)
+    return QuantTensor(q, scale)
+
+
+def quantize_activation(x: jnp.ndarray, scale: jnp.ndarray, cfg: QuantConfig = QuantConfig()):
+    """Quantize with a pre-calibrated (static) scale."""
+    q = jnp.clip(jnp.round(x / scale), -cfg.qmax - 1, cfg.qmax).astype(jnp.int8)
+    return QuantTensor(q, scale)
+
+
+def calibrate_activation_scale(samples: jnp.ndarray, cfg: QuantConfig = QuantConfig()):
+    """Per-tensor activation scale from a calibration batch."""
+    return _calib_scale(samples, dataclasses.replace(cfg, per_channel=False),
+                        tuple(range(samples.ndim)))
+
+
+def quantized_matmul_ref(xq: QuantTensor, wq: QuantTensor) -> jnp.ndarray:
+    """int8 x int8 -> int32 accumulate -> dequantized f32. Pure-jnp oracle;
+    the Pallas MXU kernel lives in kernels/quant_matmul."""
+    acc = jax.lax.dot_general(
+        xq.q, wq.q, (((xq.q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xq.scale * wq.scale.reshape(1, -1)
+
+
+def _default_predicate(path, x) -> bool:
+    """Quantize matrix weights only: rank>=3 (stacked-layer weights) or
+    top-level rank-2 matrices (embed/lm_head).  Rank-2 leaves inside stacked
+    blocks are norms/biases stacked over layers — they stay float (biases add
+    post-MAC at accumulator precision, exactly like the paper)."""
+    if not (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)):
+        return False
+    pathstr = jax.tree_util.keystr(path)
+    if x.ndim >= 3:
+        return True
+    return x.ndim == 2 and "blocks" not in pathstr and "norm" not in pathstr \
+        and "pos" not in pathstr
+
+
+def quantize_tree(params: Any, cfg: QuantConfig = QuantConfig(),
+                  predicate: Callable[[tuple, jnp.ndarray], bool] | None = None):
+    """Quantize every >=2-D float leaf (linear/embedding weights) of a pytree.
+
+    Returns a pytree with QuantTensor leaves where quantized; biases and
+    norms (1-D) stay float, mirroring the paper (biases are added post-MAC
+    at accumulator precision).
+    """
+    if predicate is None:
+        predicate = _default_predicate
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        if predicate(path, leaf):
+            # rank>=3 leaves are stacked-layer weights: per-(layer, channel)
+            # scales — better calibration AND keeps the leading dim scannable
+            if cfg.per_channel:
+                axis = tuple(range(1 if leaf.ndim >= 3 else 0, leaf.ndim - 1))
+            else:
+                axis = tuple(range(leaf.ndim))
+            scale = _calib_scale(leaf.astype(jnp.float32), cfg, axis)
+            q = jnp.clip(jnp.round(leaf / scale), -cfg.qmax - 1,
+                         cfg.qmax).astype(jnp.int8)
+            out.append(QuantTensor(q, scale))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_axes(params: Any, axes: Any,
+                  predicate: Callable[[tuple, Any], bool] | None = None) -> Any:
+    """Transform a logical-axes pytree in lockstep with quantize_tree: a
+    weight leaf's axes tuple becomes {"q": axes, "scale": (None,...,last)}
+    so sharding specs keep following the quantized structure."""
+    if predicate is None:
+        predicate = _default_predicate
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_a = jax.tree_util.tree_leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    tdef = jax.tree_util.tree_structure(axes, is_leaf=lambda x: isinstance(x, tuple))
+    out = []
+    for (path, leaf), ax in zip(flat_p, flat_a):
+        if predicate(path, leaf):
+            # QuantTensor node so the axes tree keeps the params structure;
+            # rank>=3 scales keep the stacked-layer leading axis
+            if leaf.ndim >= 3:
+                sax = (ax[0],) + (None,) * (len(ax) - 2) + (ax[-1],)
+            else:
+                sax = (None,) * (len(ax) - 1) + (ax[-1],)
+            out.append(QuantTensor(ax, sax))
+        else:
+            out.append(ax)
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def abstract_quantize_tree(params_abs: Any, cfg: QuantConfig = QuantConfig()) -> Any:
+    """quantize_tree over ShapeDtypeStructs (no allocation) — dry-run path."""
+    return jax.eval_shape(lambda p: quantize_tree(p, cfg), params_abs)
+
+
+def dequantize_tree(qparams: Any) -> Any:
+    """Inverse of quantize_tree (for accuracy-gap analysis)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.dequantize() if isinstance(x, QuantTensor) else x,
+        qparams, is_leaf=lambda x: isinstance(x, QuantTensor))
+
+
+def quantization_error(params: Any, qparams: Any) -> dict:
+    """Per-leaf relative L2 error of quantization — the paper's §III-B
+    'limitations of numerical representations' analysis, as a tool."""
+    errs = {}
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_q = jax.tree_util.tree_leaves(
+        qparams, is_leaf=lambda x: isinstance(x, QuantTensor))
+    for (path, p), q in zip(flat_p, flat_q):
+        if isinstance(q, QuantTensor):
+            d = q.dequantize()
+            errs[jax.tree_util.keystr(path)] = float(
+                jnp.linalg.norm(p - d) / (jnp.linalg.norm(p) + 1e-12))
+    return errs

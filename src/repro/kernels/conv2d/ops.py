@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the Pallas conv2d kernel.
+
+Handles SAME padding (Keras even-kernel convention: 0 before, 1 after),
+stride (via output decimation for the small strides this model family uses),
+and the VMEM-budget check for the whole-image blocking strategy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d.kernel import conv2d_pallas
+
+_VMEM_BUDGET = 14 * 2 ** 20  # leave headroom out of ~16 MB/core
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding",
+                                             "apply_sigmoid", "interpret"))
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
+           stride: int = 1, padding: str = "SAME",
+           apply_sigmoid: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """NHWC x HWIO -> NHWC, f32. Pallas windowing+MAC kernel."""
+    kh, kw, cin, cout = w.shape
+    if b is None:
+        b = jnp.zeros((cout,), jnp.float32)
+    if padding == "SAME":
+        x = jnp.pad(x, ((0, 0), (0, kh - 1), (0, kw - 1), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(padding)
+    B, Hp, Wp, _ = x.shape
+    vmem = (Hp * Wp * cin + (Hp - kh + 1) * (Wp - kw + 1) * cout) * 4
+    if vmem > _VMEM_BUDGET:
+        raise ValueError(f"image block exceeds VMEM budget: {vmem} B")
+    y = conv2d_pallas(x.astype(jnp.float32), w.astype(jnp.float32),
+                      b.astype(jnp.float32), apply_sigmoid=apply_sigmoid,
+                      interpret=interpret)
+    if stride > 1:
+        y = y[:, ::stride, ::stride, :]
+    return y

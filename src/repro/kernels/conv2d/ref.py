@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the conv2d kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
+               stride: int = 1, padding: str = "SAME",
+               apply_sigmoid: bool = False) -> jnp.ndarray:
+    kh, kw, _, cout = w.shape
+    if b is None:
+        b = jnp.zeros((cout,), jnp.float32)
+    pad = ((0, kh - 1), (0, kw - 1)) if padding == "SAME" else ((0, 0), (0, 0))
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), window_strides=(1, 1),
+        padding=pad, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + b.astype(jnp.float32)
+    if apply_sigmoid:
+        y = jax.nn.sigmoid(y)
+    if stride > 1:
+        y = y[:, ::stride, ::stride, :]
+    return y

@@ -1,0 +1,2 @@
+from repro.kernels.maxpool2d.ops import maxpool2d
+from repro.kernels.maxpool2d.ref import maxpool2d_ref

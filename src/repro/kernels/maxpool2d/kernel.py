@@ -1,0 +1,31 @@
+"""2x2/2 max pooling as a Pallas kernel — the paper's comparator-tree block.
+
+One program instance pools one image; the 2x2 window is realized as a
+3-comparator tree over four strided VMEM views (exactly the FPGA structure,
+but vectorized over the whole feature map on the VPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[0]
+    a = jnp.maximum(x[::2, ::2, :], x[::2, 1::2, :])
+    b = jnp.maximum(x[1::2, ::2, :], x[1::2, 1::2, :])
+    o_ref[...] = jnp.maximum(a, b)[None]
+
+
+def maxpool2d_pallas(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """x (B, H, W, C) with H, W even -> (B, H/2, W/2, C)."""
+    B, H, W, C = x.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, H, W, C), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, H // 2, W // 2, C), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H // 2, W // 2, C), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,17 @@
+"""jit'd wrapper: pads odd spatial dims (VALID-crop semantics preserved)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxpool2d.kernel import maxpool2d_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maxpool2d(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H//2, W//2, C), VALID 2x2/2 max pool."""
+    B, H, W, C = x.shape
+    He, We = H - H % 2, W - W % 2
+    return maxpool2d_pallas(x[:, :He, :We, :], interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for maxpool2d."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxpool2d_ref(x: jnp.ndarray) -> jnp.ndarray:
+    B, H, W, C = x.shape
+    x = x[:, :H - H % 2, :W - W % 2, :]
+    init = jnp.asarray(-jnp.inf, x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) \
+        else jnp.iinfo(x.dtype).min
+    return jax.lax.reduce_window(x, init, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")

@@ -1,0 +1,41 @@
+"""jit'd wrapper: pads to MXU-aligned tiles, picks block sizes, slices back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
+                 sx: jnp.ndarray | float = 1.0,
+                 sw: jnp.ndarray | float = 1.0, *,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Dequantized f32 = (xq @ wq) * sx[:,None] * sw[None,:].
+
+    xq (M,K) int8; wq (K,N) int8; sx scalar or (M,); sw scalar or (N,).
+    """
+    M, K = xq.shape
+    _, N = wq.shape
+    sx = jnp.broadcast_to(jnp.asarray(sx, jnp.float32).reshape(-1), (M,)) \
+        if jnp.ndim(sx) <= 1 else sx
+    sw = jnp.broadcast_to(jnp.asarray(sw, jnp.float32).reshape(-1), (N,)) \
+        if jnp.ndim(sw) <= 1 else sw
+    bm = min(256, _round_up(M, 8))
+    bn = min(256, _round_up(N, 128))
+    bk = min(512, _round_up(K, 128))
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    xp = jnp.pad(xq, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    sxp = jnp.pad(sx, (0, Mp - M))
+    swp = jnp.pad(sw, (0, Np - N))
+    y = quant_matmul_pallas(xp, wp, sxp, swp, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+    return y[:M, :N]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for quant_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray,
+                     sx: jnp.ndarray | float = 1.0,
+                     sw: jnp.ndarray | float = 1.0) -> jnp.ndarray:
+    M, _ = xq.shape
+    _, N = wq.shape
+    sx = jnp.broadcast_to(jnp.asarray(sx, jnp.float32).reshape(-1), (M,))
+    sw = jnp.broadcast_to(jnp.asarray(sw, jnp.float32).reshape(-1), (N,))
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx[:, None] * sw[None, :]

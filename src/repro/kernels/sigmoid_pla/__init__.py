@@ -1,0 +1,2 @@
+from repro.kernels.sigmoid_pla.ops import sigmoid_pla
+from repro.kernels.sigmoid_pla.ref import sigmoid_pla_ref

@@ -1,0 +1,24 @@
+"""jit'd wrapper: reshapes any-rank input onto aligned 2-D tiles."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sigmoid_pla.kernel import sigmoid_pla_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sigmoid_pla(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    C = 128
+    n = flat.shape[0]
+    rows = max(1, -(-n // C))
+    block = min(256, rows)
+    rows_p = -(-rows // block) * block
+    pad = rows_p * C - n
+    x2 = jnp.pad(flat, (0, pad)).reshape(rows_p, C)
+    y = sigmoid_pla_pallas(x2, block_rows=block, interpret=interpret)
+    return y.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the PLAN sigmoid kernel (shared with core.fixed_point)."""
+from repro.core.fixed_point import sigmoid_plan_f32 as sigmoid_pla_ref  # noqa: F401

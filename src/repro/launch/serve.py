@@ -1,0 +1,52 @@
+"""Serving launcher: continuous-batching engine over a selected arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+        --requests 16 --batch 4 [--int8]
+
+`--int8` applies the paper's deployment flow (PTQ int8 baked weights) before
+serving.  Fleet posture mirrors launch/train.py: per-host engines behind a
+router, decode jits compiled against the production mesh (see
+launch/lowering.py decode path and EXPERIMENTS.md §Perf cell 3).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--int8", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.core import ptq
+    from repro.models import model as M
+    from repro.serving.engine import Engine, Request
+
+    cfg = get_config(args.arch).smoke()
+    model = M.build(cfg)
+    params, _ = model.init(jax.random.key(0))
+    if args.int8:
+        params = ptq.dequantize_tree(ptq.quantize_tree(params))
+        print("serving int8-quantized weights (PTQ, per-channel)")
+    eng = Engine(cfg, params, batch_size=args.batch, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(1, cfg.vocab, 6).astype(np.int32),
+                    max_new_tokens=args.max_new) for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done = eng.submit_and_run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {dt:.2f}s ({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+Every init function returns (params, axes) where `axes` is a parallel pytree
+of logical-axis-name tuples consumed by distributed.sharding.specs_from_axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def init_norm(d: int, kind: str, dtype) -> tuple[dict, dict]:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}, {"w": (None,)}
+    return ({"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+            {"w": (None,), "b": (None,)})
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, S, H, D); positions (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    if ang.ndim == 2:                                  # (S, D/2) -> broadcast B
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --- dense / linear ---------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+                in_axis: str | None = "fsdp", out_axis: str | None = "w_model",
+                scale: float | None = None) -> tuple[dict, dict]:
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    a = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        a["b"] = (out_axis,)
+    return p, a
+
+
+def _materialize(w, compute_dtype):
+    """int8 (paper-style baked) weights dequantize on-use; HBM moves 1 byte
+    per element instead of 2 — the paper's quantized-deployment technique as
+    a serving-roofline optimization."""
+    from repro.core.ptq import QuantTensor
+    if isinstance(w, QuantTensor):
+        return w.q.astype(compute_dtype) * w.scale.astype(compute_dtype)
+    return w.astype(compute_dtype)
+
+
+def linear(x: jnp.ndarray, p: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    y = x.astype(compute_dtype) @ _materialize(p["w"], compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# --- MLP --------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str, dtype) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 3)
+    if kind == "gated":          # SwiGLU (llama family)
+        wi, ai = init_linear(ks[0], d, d_ff, dtype)
+        wg, ag = init_linear(ks[1], d, d_ff, dtype)
+        wo, ao = init_linear(ks[2], d_ff, d, dtype, in_axis="w_model", out_axis="fsdp")
+        return ({"wi": wi, "wg": wg, "wo": wo}, {"wi": ai, "wg": ag, "wo": ao})
+    wi, ai = init_linear(ks[0], d, d_ff, dtype)
+    wo, ao = init_linear(ks[2], d_ff, d, dtype, in_axis="w_model", out_axis="fsdp")
+    return ({"wi": wi, "wo": wo}, {"wi": ai, "wo": ao})
+
+
+def mlp(x: jnp.ndarray, p: dict, kind: str, compute_dtype=jnp.bfloat16,
+        *, decode: bool = False) -> jnp.ndarray:
+    if decode:
+        # decode: batch-replicated activations + FSDP-sharded weights ->
+        # partial-sum all-reduces (MBs) instead of weight gathers (100s MB)
+        x = constrain(x, None, None, "embed")
+    else:
+        # explicit SP boundary before the TP matmul (see attention._qkv)
+        x = constrain(x, "batch", None, "embed")
+    if kind == "gated":
+        h = jax.nn.silu(linear(x, p["wg"], compute_dtype)) * linear(x, p["wi"], compute_dtype)
+    else:
+        h = jax.nn.gelu(linear(x, p["wi"], compute_dtype))
+    h = constrain(h, None if decode else "batch", "seq", "ffn")
+    return linear(h, p["wo"], compute_dtype)
+
+
+# --- embeddings -------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> tuple[dict, dict]:
+    p = {"w": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+    return p, {"w": ("vocab", "fsdp")}
+
+
+def embed(tokens: jnp.ndarray, p: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    from repro.core.ptq import QuantTensor
+    w = p["w"]
+    if isinstance(w, QuantTensor):
+        rows = jnp.take(w.q, tokens, axis=0).astype(compute_dtype)
+        return rows * w.scale.reshape(-1).astype(compute_dtype)
+    return jnp.take(w.astype(compute_dtype), tokens, axis=0)

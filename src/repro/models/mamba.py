@@ -1,0 +1,118 @@
+"""Selective SSM (Mamba) block for the Jamba hybrid.
+
+in_proj -> causal depthwise conv1d (k=4) -> silu -> selective scan
+(data-dependent Δ, B, C; diagonal A) -> gate -> out_proj.
+State is (B, d_inner, d_state): O(1) in sequence length (long_500k-capable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import scan_utils
+
+D_STATE = 16
+D_CONV = 4
+DT_RANK_DIV = 16     # dt_rank = d_model / 16
+
+
+def init_mamba_block(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    d_in = 2 * d
+    dt_rank = max(1, d // DT_RANK_DIV)
+    ks = jax.random.split(key, 6)
+    std = 1.0 / (d ** 0.5)
+    dn = lambda k, sh, s=std: (jax.random.normal(k, sh, jnp.float32) * s).astype(cfg.param_dtype)
+    p = {
+        "in_proj": dn(ks[0], (d, 2 * d_in)),          # x & gate
+        "conv_w": dn(ks[1], (D_CONV, d_in), 0.2),     # depthwise
+        "conv_b": jnp.zeros((d_in,), cfg.param_dtype),
+        "x_proj": dn(ks[2], (d_in, dt_rank + 2 * D_STATE)),
+        "dt_proj": dn(ks[3], (dt_rank, d_in), 0.1),
+        "dt_bias": jnp.zeros((d_in,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, D_STATE + 1, dtype=jnp.float32)[None],
+                                  (d_in, 1))).astype(cfg.param_dtype),
+        "D": jnp.ones((d_in,), cfg.param_dtype),
+        "out_proj": dn(ks[5], (d_in, d)),
+    }
+    a = {
+        "in_proj": ("fsdp", "ffn"), "conv_w": (None, "ffn"), "conv_b": ("ffn",),
+        "x_proj": ("ffn", None), "dt_proj": (None, "ffn"), "dt_bias": ("ffn",),
+        "A_log": ("ffn", None), "D": ("ffn",), "out_proj": ("ffn", "fsdp"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv along T. x (B,T,C); w (K,C); returns (y, new_state)
+    where state is the last K-1 inputs (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return y + b[None, None, :], xp[:, -(K - 1):, :]
+
+
+def _selective_scan(u, dt, Bc, Cc, A, D, *, state=None):
+    """u (B,T,C); dt (B,T,C); Bc/Cc (B,T,N); A (C,N); D (C,).
+    h_t = exp(dt*A) h + dt*B*u ; y = C.h + D*u. Returns (y, final h (B,C,N))."""
+    Bsz, T, C = u.shape
+    N = A.shape[1]
+    if state is None:
+        state = jnp.zeros((Bsz, C, N), jnp.float32)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = [a.astype(jnp.float32) for a in inp]   # upcast per step
+        dA = jnp.exp(dtt[..., None] * A[None])      # (B,C,N)
+        dBu = (dtt * ut)[..., None] * bt[:, None, :]
+        h = dA * h + dBu
+        yt = jnp.einsum("bcn,bn->bc", h, ct)
+        return h, yt
+
+    # pin scan inputs seq-unsharded (see rwkv6._wkv_scan: scanning a
+    # res_seq-sharded axis degenerates to per-step whole-stack all-gathers)
+    pin3 = lambda a: constrain(a, None, "batch", "ffn")
+    pin_n = lambda a: constrain(a, None, "batch", None)
+    xs = (pin3(u.swapaxes(0, 1)), pin3(dt.swapaxes(0, 1)),
+          pin_n(Bc.swapaxes(0, 1)), pin_n(Cc.swapaxes(0, 1)))
+    state, ys = scan_utils.chunked_scan(step, state, xs)
+    ys = pin3(ys)      # pins the cotangent too: bwd scan must not re-gather
+    return ys.swapaxes(0, 1) + u.astype(jnp.float32) * D[None, None, :], state
+
+
+def mamba_block(x, p, cfg, *, state=None):
+    """x (B,T,d) -> (out, new_state). state = {"conv": (B,3,d_in), "ssm": (B,d_in,N)}."""
+    B, T, d = x.shape
+    d_in = 2 * d
+    dt_rank = max(1, d // DT_RANK_DIV)
+    st_conv = None if state is None else state["conv"]
+    st_ssm = None if state is None else state["ssm"]
+    xz = x @ p["in_proj"].astype(x.dtype)           # (B,T,2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq", "ffn")
+    xs, new_conv = _causal_conv(xs, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), state=st_conv)
+    xs = jax.nn.silu(xs)
+    proj = xs @ p["x_proj"].astype(x.dtype)         # (B,T,dt_rank+2N)
+    dt_raw = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + D_STATE]
+    Cc = proj[..., dt_rank + D_STATE:]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssm = _selective_scan(xs, dt, Bc, Cc, A,
+                                 p["D"].astype(jnp.float32), state=st_ssm)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def mamba_state_shape(batch: int, cfg):
+    d_in = 2 * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, D_CONV - 1, d_in), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, D_STATE), jnp.float32),
+    }

@@ -1,0 +1,101 @@
+"""Model facade: config -> callables + abstract input specs for every shape."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Any           # key -> (params, axes)
+    forward: Any        # (params, batch) -> (logits, aux)
+    loss: Any           # (params, batch) -> (loss, metrics)
+    prefill: Any        # (params, batch) -> (last_logits, cache)
+    decode_step: Any    # (params, cache, token, pos) -> (logits, cache)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(transformer.init_params, cfg),
+        forward=functools.partial(transformer.forward, cfg),
+        loss=functools.partial(transformer.loss_fn, cfg),
+        prefill=functools.partial(transformer.prefill, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg),
+    )
+
+
+def abstract_params(cfg: ArchConfig):
+    """(params, axes) with ShapeDtypeStruct leaves — no allocation."""
+    params = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.key(0))[0])
+    _, axes = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.key(0)))
+    # axes is a static pytree of tuples; recompute it concretely (cheap):
+    return params, param_axes(cfg)
+
+
+def param_axes(cfg: ArchConfig):
+    """Logical-axes pytree without allocating parameters."""
+    closed = jax.eval_shape(functools.partial(_init_with_axes, cfg))
+    return closed[1]
+
+
+def _init_with_axes(cfg):
+    return transformer.init_params(cfg, jax.random.key(0))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape cell
+    (the dry-run's no-allocation inputs). Modality frontends are stubs per
+    the assignment: frames/vision arrive as precomputed embeddings."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "cache": transformer.init_cache_shape(cfg, B, S),
+        }
+    else:
+        raise ValueError(shape.kind)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_frames, cfg.d_model),
+                                               cfg.dtype)
+    if cfg.family == "vlm":
+        specs["vision"] = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.vit_dim),
+                                               cfg.dtype)
+    return specs
+
+
+def synth_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0,
+                batch_override: int | None = None) -> dict:
+    """Concrete deterministic synthetic batch matching input_specs."""
+    specs = input_specs(cfg, shape, batch_override)
+    key = jax.random.key(seed)
+
+    def gen(path, s):
+        k = jax.random.fold_in(key, hash(path) % (2 ** 31))
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab if "token" in path or "label" in path else 2 ** 30
+            return jax.random.randint(k, s.shape, 0, hi, s.dtype)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.1
+
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    tdef = jax.tree_util.tree_structure(specs)
+    leaves = [gen(jax.tree_util.keystr(p), s) for p, s in flat]
+    out = jax.tree_util.tree_unflatten(tdef, leaves)
+    if shape.kind == "decode":
+        out["pos"] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+    return out

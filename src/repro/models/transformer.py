@@ -1,0 +1,541 @@
+"""Architecture assembly: decoder stacks, hybrid interleave, enc-dec, VLM.
+
+All stacks scan over stacked layer params (`lax.scan`), optionally with
+per-layer remat — this keeps the HLO one-layer-sized (critical for the
+512-device dry-run compiles) and bounds activation memory.
+
+Entry points (all pure functions of (cfg, params, ...)):
+    init_params(cfg, key)              -> (params, axes)
+    forward(cfg, params, batch)        -> (logits, aux)       [train/prefill math]
+    prefill(cfg, params, batch)        -> (last_logits, cache)
+    decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+    init_cache_shape(cfg, batch, max_len)       -> pytree of ShapeDtypeStruct
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers, mamba, moe, rwkv6
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n keys -> stacked params; prepend 'layers' axis name."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)
+    axes = jax.tree_util.tree_map(lambda a: ("layers",) + a, axes,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+def _init_dense_block(cfg, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pa, aa = attn.init_attention(k1, cfg)
+    n1, an1 = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+    n2, an2 = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+    if cfg.family in ("moe",):
+        pm, am = moe.init_moe(k2, cfg)
+    else:
+        pm, am = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.param_dtype)
+    return ({"attn": pa, "mlp": pm, "norm1": n1, "norm2": n2},
+            {"attn": aa, "mlp": am, "norm1": an1, "norm2": an2})
+
+
+def _init_rwkv_layer(cfg, key):
+    p, a = rwkv6.init_rwkv_block(key, cfg)
+    n1, an1 = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+    n2, an2 = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+    return ({"rwkv": p, "norm1": n1, "norm2": n2},
+            {"rwkv": a, "norm1": an1, "norm2": an2})
+
+
+def _init_jamba_superblock(cfg, key):
+    """8 sublayers: mamba at all slots except attn_offset; MoE every 2nd."""
+    P = cfg.attn_period
+    ks = jax.random.split(key, 2 * P + 2)
+    subs_p, subs_a = {}, {}
+    # 7 mamba mixers (stacked), 1 attention mixer
+    pm, am = _stack_init(lambda k: mamba.init_mamba_block(k, cfg), ks[0], P - 1)
+    pa, aa = attn.init_attention(ks[1], cfg)
+    # MLPs: alternate dense / MoE across the P sublayers
+    n_moe = P // cfg.moe_every
+    pmoe, amoe = _stack_init(lambda k: moe.init_moe(k, cfg), ks[2], n_moe)
+    pmlp, amlp = _stack_init(
+        lambda k: layers.init_mlp(k, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.param_dtype),
+        ks[3], P - n_moe)
+    norms_p, norms_a = _stack_init(
+        lambda k: (layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)),
+        ks[4], 2 * P)
+    return ({"mamba": pm, "attn": pa, "moe": pmoe, "mlp": pmlp, "norms": norms_p},
+            {"mamba": am, "attn": aa, "moe": amoe, "mlp": amlp, "norms": norms_a})
+
+
+def _init_whisper_dec_block(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    psa, asa = attn.init_attention(k1, cfg)
+    pca, aca = attn.init_attention(k2, cfg)
+    pm, am = layers.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.param_dtype)
+    norms = [layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype) for _ in range(3)]
+    return ({"self": psa, "cross": pca, "mlp": pm,
+             "norm1": norms[0][0], "norm2": norms[1][0], "norm3": norms[2][0]},
+            {"self": asa, "cross": aca, "mlp": am,
+             "norm1": norms[0][1], "norm2": norms[1][1], "norm3": norms[2][1]})
+
+
+def init_params(cfg, key) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 8)
+    pe, ae = layers.init_embed(ks[0], cfg.vocab_padded, cfg.d_model, cfg.param_dtype)
+    nf, anf = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+    params: dict = {"embed": pe, "final_norm": nf}
+    axes: dict = {"embed": ae, "final_norm": anf}
+    if not cfg.tie_embeddings:
+        ph, ah = layers.init_linear(ks[1], cfg.d_model, cfg.vocab_padded,
+                                    cfg.param_dtype, out_axis="vocab")
+        params["lm_head"], axes["lm_head"] = ph, ah
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["blocks"], axes["blocks"] = _stack_init(
+            lambda k: _init_dense_block(cfg, k), ks[2], cfg.n_layers)
+    elif fam == "ssm":
+        params["blocks"], axes["blocks"] = _stack_init(
+            lambda k: _init_rwkv_layer(cfg, k), ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_period
+        params["blocks"], axes["blocks"] = _stack_init(
+            lambda k: _init_jamba_superblock(cfg, k), ks[2], n_super)
+    elif fam == "audio":
+        params["enc_blocks"], axes["enc_blocks"] = _stack_init(
+            lambda k: _init_dense_block(cfg, k), ks[3], cfg.encoder_layers)
+        params["blocks"], axes["blocks"] = _stack_init(
+            lambda k: _init_whisper_dec_block(cfg, k), ks[2], cfg.n_layers)
+        params["enc_pos"] = (jax.random.normal(ks[4], (cfg.encoder_frames, cfg.d_model),
+                                               jnp.float32) * 0.02).astype(cfg.param_dtype)
+        params["dec_pos"] = (jax.random.normal(ks[5], (32768, cfg.d_model),
+                                               jnp.float32) * 0.02).astype(cfg.param_dtype)
+        axes["enc_pos"] = (None, None)
+        axes["dec_pos"] = (None, None)
+        pn, an = layers.init_norm(cfg.d_model, cfg.norm, cfg.param_dtype)
+        params["enc_final_norm"], axes["enc_final_norm"] = pn, an
+    if fam == "vlm":
+        pv, av = layers.init_linear(ks[6], cfg.vit_dim, cfg.d_model,
+                                    cfg.param_dtype, in_axis=None, out_axis="fsdp")
+        params["vision_proj"], axes["vision_proj"] = pv, av
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _dense_body(cfg, x, blk, positions, *, causal=True):
+    h = x + attn.attention_block(
+        layers.apply_norm(x, blk["norm1"], cfg.norm), blk["attn"], cfg,
+        positions, causal=causal)
+    hn = layers.apply_norm(h, blk["norm2"], cfg.norm)
+    if cfg.family == "moe":
+        y, aux = moe.moe_mlp(hn, blk["mlp"], cfg)
+    else:
+        y, aux = layers.mlp(hn, blk["mlp"], cfg.mlp, cfg.dtype), 0.0
+    h = h + y
+    h = constrain(h, "batch", "res_seq", "embed")
+    return h, aux
+
+
+def _rwkv_body(cfg, x, blk):
+    y, _ = rwkv6.time_mix(layers.apply_norm(x, blk["norm1"], cfg.norm),
+                          blk["rwkv"], cfg)
+    h = x + y
+    y, _ = rwkv6.channel_mix(layers.apply_norm(h, blk["norm2"], cfg.norm),
+                             blk["rwkv"], cfg)
+    h = h + y
+    return constrain(h, "batch", "res_seq", "embed"), 0.0
+
+
+def _jamba_body(cfg, x, blk, positions):
+    P = cfg.attn_period
+    aux_total = 0.0
+    mi = 0          # mamba sublayer index
+    di = 0          # dense-mlp index
+    ei = 0          # moe index
+    for s in range(P):
+        n1 = jax.tree_util.tree_map(lambda p: p[2 * s], blk["norms"])
+        n2 = jax.tree_util.tree_map(lambda p: p[2 * s + 1], blk["norms"])
+        xn = layers.apply_norm(x, n1, cfg.norm)
+        if s == cfg.attn_offset:
+            y = attn.attention_block(xn, blk["attn"], cfg, positions, causal=True)
+        else:
+            mp = jax.tree_util.tree_map(lambda p: p[mi], blk["mamba"])
+            y, _ = mamba.mamba_block(xn, mp, cfg)
+            mi += 1
+        x = x + y
+        xn = layers.apply_norm(x, n2, cfg.norm)
+        if s % cfg.moe_every == cfg.moe_every - 1:
+            ep = jax.tree_util.tree_map(lambda p: p[ei], blk["moe"])
+            y, aux = moe.moe_mlp(xn, ep, cfg)
+            aux_total = aux_total + aux
+            ei += 1
+        else:
+            dp = jax.tree_util.tree_map(lambda p: p[di], blk["mlp"])
+            y = layers.mlp(xn, dp, cfg.mlp, cfg.dtype)
+            di += 1
+        x = x + y
+    return constrain(x, "batch", "res_seq", "embed"), aux_total
+
+
+def _whisper_dec_body(cfg, x, blk, positions, enc_k, enc_v):
+    h = x + attn.attention_block(
+        layers.apply_norm(x, blk["norm1"], cfg.norm), blk["self"], cfg,
+        positions, causal=True)
+    h = h + attn.cross_attention_block(
+        layers.apply_norm(h, blk["norm2"], cfg.norm), blk["cross"], cfg, enc_k, enc_v)
+    h = h + layers.mlp(layers.apply_norm(h, blk["norm3"], cfg.norm),
+                       blk["mlp"], cfg.mlp, cfg.dtype)
+    return constrain(h, "batch", "res_seq", "embed"), 0.0
+
+
+def _scan_blocks(cfg, x, stacked, body):
+    """Scan x through stacked blocks; body(x, blk) -> (x, aux)."""
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(body)
+
+    def step(carry, blk):
+        x, aux = carry
+        x, a = fn(x, blk)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill math)
+# ---------------------------------------------------------------------------
+
+def _encode_audio(cfg, params, frames):
+    """frames (B, F, d_model) — precomputed by the stub conv frontend."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"][None, :frames.shape[1]].astype(cfg.dtype)
+    positions = jnp.arange(frames.shape[1])
+    x, _ = _scan_blocks(cfg, x, params["enc_blocks"],
+                        lambda x, blk: _dense_body(cfg, x, blk, positions, causal=False))
+    return layers.apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+def _logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        w = layers._materialize(params["embed"]["w"], cfg.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = layers.linear(x, params["lm_head"], cfg.dtype)
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def forward(cfg, params, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {"tokens": (B,S) int32, optional "frames"/"vision"} ->
+    (logits (B,S,vocab_padded) f32, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(tokens, params["embed"], cfg.dtype)
+    x = constrain(x, "batch", "res_seq", "embed")
+    positions = jnp.arange(S)
+    fam = cfg.family
+
+    if fam == "vlm":
+        v = layers.linear(batch["vision"].astype(cfg.dtype), params["vision_proj"], cfg.dtype)
+        x = jnp.concatenate([v, x[:, cfg.vision_tokens:]], axis=1)
+    if fam == "audio":
+        x = x + params["dec_pos"][None, :S].astype(cfg.dtype)
+        enc_out = _encode_audio(cfg, params, batch["frames"])
+        # cross K/V computed once per decoder layer inside the body (scanned)
+        def body(x, blk):
+            ek, ev = attn.encoder_kv(enc_out, blk["cross"], cfg)
+            return _whisper_dec_body(cfg, x, blk, positions, ek, ev)
+        x, aux = _scan_blocks(cfg, x, params["blocks"], body)
+    elif fam in ("dense", "moe", "vlm"):
+        x, aux = _scan_blocks(cfg, x, params["blocks"],
+                              lambda x, blk: _dense_body(cfg, x, blk, positions))
+    elif fam == "ssm":
+        x, aux = _scan_blocks(cfg, x, params["blocks"],
+                              lambda x, blk: _rwkv_body(cfg, x, blk))
+    elif fam == "hybrid":
+        x, aux = _scan_blocks(cfg, x, params["blocks"],
+                              lambda x, blk: _jamba_body(cfg, x, blk, positions))
+    else:
+        raise ValueError(fam)
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg, params, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """Next-token CE (labels = batch['labels'])."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+def init_cache_shape(cfg, batch: int, max_len: int):
+    """Abstract cache pytree (ShapeDtypeStructs) for dry-run and engine alloc."""
+    fam = cfg.family
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    kv = lambda L: {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, K, hd), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, K, hd), cfg.dtype),
+    }
+    if fam in ("dense", "moe", "vlm"):
+        return kv(cfg.n_layers)
+    if fam == "ssm":
+        st = rwkv6.rwkv_state_shape(batch, cfg)
+        L = cfg.n_layers
+        return {k: jax.ShapeDtypeStruct((L,) + v.shape, v.dtype) for k, v in st.items()}
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_period
+        ms = mamba.mamba_state_shape(batch, cfg)
+        out = kv(n_super)
+        for k, v in ms.items():
+            out["mamba_" + k] = jax.ShapeDtypeStruct(
+                (n_super, cfg.attn_period - 1) + v.shape, v.dtype)
+        return out
+    if fam == "audio":
+        out = kv(cfg.n_layers)
+        out["cross_k"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.encoder_frames, K, hd), cfg.dtype)
+        out["cross_v"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.encoder_frames, K, hd), cfg.dtype)
+        return out
+    raise ValueError(fam)
+
+
+def zeros_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  init_cache_shape(cfg, batch, max_len))
+
+
+def decode_step(cfg, params, cache, token: jnp.ndarray, pos: jnp.ndarray):
+    """token (B,1) int32; pos scalar int32. Returns (logits (B, vocab_padded),
+    new cache). One serve_step — this is what decode_* shapes lower."""
+    B = token.shape[0]
+    x = layers.embed(token, params["embed"], cfg.dtype)   # (B,1,d)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        def body(x, xs):
+            blk, ck, cv = xs["blk"], xs["k"], xs["v"]
+            xn = layers.apply_norm(x, blk["norm1"], cfg.norm)
+            key_self = "self" if fam == "audio" else "attn"
+            y, newc = attn.decode_attention_block(xn, blk[key_self], cfg,
+                                                  attn.KVCache(ck, cv), pos)
+            x = x + y
+            if fam == "audio":
+                x = x + attn.cross_attention_block(
+                    layers.apply_norm(x, blk["norm2"], cfg.norm), blk["cross"],
+                    cfg, xs["xk"], xs["xv"])
+                xn = layers.apply_norm(x, blk["norm3"], cfg.norm)
+                x = x + layers.mlp(xn, blk["mlp"], cfg.mlp, cfg.dtype, decode=True)
+            else:
+                xn = layers.apply_norm(x, blk["norm2"], cfg.norm)
+                if fam == "moe":
+                    y, _ = moe.moe_mlp(xn, blk["mlp"], cfg, group_size=B)
+                else:
+                    y = layers.mlp(xn, blk["mlp"], cfg.mlp, cfg.dtype, decode=True)
+                x = x + y
+            return x, (newc.k, newc.v)
+
+        if fam == "audio":
+            x = x + params["dec_pos"][None, pos].astype(cfg.dtype)
+        xs = {"blk": params["blocks"], "k": cache["k"], "v": cache["v"]}
+        if fam == "audio":
+            xs["xk"], xs["xv"] = cache["cross_k"], cache["cross_v"]
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        cache = dict(cache, k=nk, v=nv)
+    elif fam == "ssm":
+        def body(x, xs):
+            blk = xs["blk"]
+            y, (xtm, wkv) = rwkv6.time_mix(
+                layers.apply_norm(x, blk["norm1"], cfg.norm), blk["rwkv"], cfg,
+                xprev_last=xs["x_tm"], state=xs["wkv"])
+            x = x + y
+            y, xcm = rwkv6.channel_mix(
+                layers.apply_norm(x, blk["norm2"], cfg.norm), blk["rwkv"], cfg,
+                xprev_last=xs["x_cm"])
+            return x + y, (wkv, xtm, xcm)
+
+        xs = {"blk": params["blocks"], "wkv": cache["wkv"],
+              "x_tm": cache["x_tm"], "x_cm": cache["x_cm"]}
+        x, (wkv, xtm, xcm) = jax.lax.scan(body, x, xs)
+        cache = {"wkv": wkv, "x_tm": xtm, "x_cm": xcm}
+    elif fam == "hybrid":
+        P = cfg.attn_period
+
+        def body(x, xs):
+            blk = xs["blk"]
+            mi = 0
+            new_conv, new_ssm = [], []
+            newk = newv = None
+            for s in range(P):
+                n1 = jax.tree_util.tree_map(lambda p: p[2 * s], blk["norms"])
+                n2 = jax.tree_util.tree_map(lambda p: p[2 * s + 1], blk["norms"])
+                xn = layers.apply_norm(x, n1, cfg.norm)
+                if s == cfg.attn_offset:
+                    y, newc = attn.decode_attention_block(
+                        xn, blk["attn"], cfg, attn.KVCache(xs["k"], xs["v"]), pos)
+                    newk, newv = newc.k, newc.v
+                else:
+                    mp = jax.tree_util.tree_map(lambda p: p[mi], blk["mamba"])
+                    st = {"conv": xs["mamba_conv"][mi], "ssm": xs["mamba_ssm"][mi]}
+                    y, nst = mamba.mamba_block(xn, mp, cfg, state=st)
+                    new_conv.append(nst["conv"]); new_ssm.append(nst["ssm"])
+                    mi += 1
+                x = x + y
+                xn = layers.apply_norm(x, n2, cfg.norm)
+                if s % cfg.moe_every == cfg.moe_every - 1:
+                    ei = s // cfg.moe_every
+                    ep = jax.tree_util.tree_map(lambda p: p[ei], blk["moe"])
+                    y, _ = moe.moe_mlp(xn, ep, cfg, group_size=x.shape[0])
+                else:
+                    dp = jax.tree_util.tree_map(lambda p: p[_dense_mlp_index(cfg, s)], blk["mlp"])
+                    y = layers.mlp(xn, dp, cfg.mlp, cfg.dtype)
+                x = x + y
+            return x, (newk, newv, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+        xs = {"blk": params["blocks"], "k": cache["k"], "v": cache["v"],
+              "mamba_conv": cache["mamba_conv"], "mamba_ssm": cache["mamba_ssm"]}
+        x, (nk, nv, nconv, nssm) = jax.lax.scan(body, x, xs)
+        cache = {"k": nk, "v": nv, "mamba_conv": nconv, "mamba_ssm": nssm}
+    else:
+        raise ValueError(fam)
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, cache
+
+
+def _dense_mlp_index(cfg, s: int) -> int:
+    """Index into the dense-mlp stack for sublayer s (non-MoE slots)."""
+    return sum(1 for t in range(s) if t % cfg.moe_every != cfg.moe_every - 1)
+
+
+def prefill(cfg, params, batch: dict):
+    """Single-pass prompt processing: forward math + decode-cache
+    materialization in the same layer scan.  Returns
+    (last-position logits (B, vocab_padded), cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    fam = cfg.family
+    x = layers.embed(tokens, params["embed"], cfg.dtype)
+    x = constrain(x, "batch", "res_seq", "embed")
+    positions = jnp.arange(S)
+
+    if fam in ("dense", "moe", "vlm"):
+        if fam == "vlm":
+            v = layers.linear(batch["vision"].astype(cfg.dtype),
+                              params["vision_proj"], cfg.dtype)
+            x = jnp.concatenate([v, x[:, cfg.vision_tokens:]], axis=1)
+
+        def body(x, blk):
+            xn = layers.apply_norm(x, blk["norm1"], cfg.norm)
+            q, k, v = attn._qkv(xn, blk["attn"], cfg, positions)
+            o = attn.causal_attention(q, k, v, q_chunk=min(cfg.q_chunk, S))
+            o = layers.linear(o.reshape(B, S, -1), blk["attn"]["wo"], cfg.dtype)
+            h = x + o
+            hn = layers.apply_norm(h, blk["norm2"], cfg.norm)
+            if cfg.family == "moe":
+                y, _ = moe.moe_mlp(hn, blk["mlp"], cfg)
+            else:
+                y = layers.mlp(hn, blk["mlp"], cfg.mlp, cfg.dtype)
+            h = constrain(h + y, "batch", "res_seq", "embed")
+            return h, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(x, blk):
+            y, (xtm, wkv) = rwkv6.time_mix(
+                layers.apply_norm(x, blk["norm1"], cfg.norm), blk["rwkv"], cfg)
+            h = x + y
+            y, xcm = rwkv6.channel_mix(
+                layers.apply_norm(h, blk["norm2"], cfg.norm), blk["rwkv"], cfg)
+            return h + y, (wkv.astype(jnp.float32), xtm.astype(cfg.dtype),
+                           xcm.astype(cfg.dtype))
+
+        x, (wkv, xtm, xcm) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"wkv": wkv, "x_tm": xtm, "x_cm": xcm}
+    elif fam == "hybrid":
+        P = cfg.attn_period
+
+        def body(x, blk):
+            mi = 0
+            convs, ssms = [], []
+            kk = vv = None
+            for s in range(P):
+                n1 = jax.tree_util.tree_map(lambda p: p[2 * s], blk["norms"])
+                n2 = jax.tree_util.tree_map(lambda p: p[2 * s + 1], blk["norms"])
+                xn = layers.apply_norm(x, n1, cfg.norm)
+                if s == cfg.attn_offset:
+                    q, k, v = attn._qkv(xn, blk["attn"], cfg, positions)
+                    o = attn.causal_attention(q, k, v, q_chunk=min(cfg.q_chunk, S))
+                    y = layers.linear(o.reshape(x.shape[0], S, -1),
+                                      blk["attn"]["wo"], cfg.dtype)
+                    kk, vv = k.astype(cfg.dtype), v.astype(cfg.dtype)
+                else:
+                    mp = jax.tree_util.tree_map(lambda p: p[mi], blk["mamba"])
+                    y, nst = mamba.mamba_block(xn, mp, cfg)
+                    convs.append(nst["conv"]); ssms.append(nst["ssm"])
+                    mi += 1
+                x = x + y
+                xn = layers.apply_norm(x, n2, cfg.norm)
+                if s % cfg.moe_every == cfg.moe_every - 1:
+                    ep = jax.tree_util.tree_map(lambda p: p[s // cfg.moe_every], blk["moe"])
+                    y, _ = moe.moe_mlp(xn, ep, cfg)
+                else:
+                    dp = jax.tree_util.tree_map(
+                        lambda p: p[_dense_mlp_index(cfg, s)], blk["mlp"])
+                    y = layers.mlp(xn, dp, cfg.mlp, cfg.dtype)
+                x = x + y
+            return x, (kk, vv, jnp.stack(convs).astype(cfg.dtype),
+                       jnp.stack(ssms))
+
+        x, (ks, vs, convs, ssms) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs, "mamba_conv": convs, "mamba_ssm": ssms}
+    elif fam == "audio":
+        x = x + params["dec_pos"][None, :S].astype(cfg.dtype)
+        enc_out = _encode_audio(cfg, params, batch["frames"])
+
+        def body(x, blk):
+            ek, ev = attn.encoder_kv(enc_out, blk["cross"], cfg)
+            xn = layers.apply_norm(x, blk["norm1"], cfg.norm)
+            q, k, v = attn._qkv(xn, blk["self"], cfg, positions)
+            o = attn.causal_attention(q, k, v, q_chunk=min(cfg.q_chunk, S))
+            h = x + layers.linear(o.reshape(B, S, -1), blk["self"]["wo"], cfg.dtype)
+            h = h + attn.cross_attention_block(
+                layers.apply_norm(h, blk["norm2"], cfg.norm), blk["cross"], cfg, ek, ev)
+            h = h + layers.mlp(layers.apply_norm(h, blk["norm3"], cfg.norm),
+                               blk["mlp"], cfg.mlp, cfg.dtype)
+            return h, (k.astype(cfg.dtype), v.astype(cfg.dtype), ek.astype(cfg.dtype),
+                       ev.astype(cfg.dtype))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs, "cross_k": xks, "cross_v": xvs}
+    else:
+        raise ValueError(fam)
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, -1], cache

@@ -1,0 +1,2 @@
+from repro.optim.adam import (AdamConfig, adam_init, adam_update,
+                              cosine_schedule, clip_by_global_norm)

@@ -1,0 +1,60 @@
+"""Step functions: microbatched train_step, prefill_step, decode (serve) step.
+
+train_step = lax.scan over gradient-accumulation microbatches (bounds
+activation memory; DESIGN.md §5) + Adam update.  Gradient accumulation dtype
+follows param_dtype: f32 for <=100B-param configs, bf16 for the giants
+(documented HBM trade-off).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamConfig, adam_init, adam_update
+
+
+def make_train_step(model, optim_cfg: AdamConfig,
+                    lr_schedule: Callable | None = None) -> Callable:
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        n_micro = max(1, B // max(1, cfg.micro_batch))
+        acc_dtype = cfg.param_dtype
+
+        def to_micro(x):
+            return x.reshape((n_micro, B // n_micro) + x.shape[1:])
+
+        mb = jax.tree_util.tree_map(to_micro, batch)
+
+        def micro(carry, b):
+            gacc, lacc = carry
+            (loss, _met), grads = jax.value_and_grad(model.loss, has_aux=True)(params, b)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dtype), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        lr = lr_schedule(opt_state.step) if lr_schedule else None
+        params, opt_state, om = adam_update(grads, opt_state, params, optim_cfg, lr)
+        return params, opt_state, {"loss": lsum / n_micro, **om}
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return decode_step

@@ -1,0 +1,89 @@
+"""Trainer: the composable train loop used by examples/ and launch/train.py.
+
+Wires together: model zoo + sharded step functions + deterministic data +
+async checkpointing + fault hooks (watchdog, straggler stats, auto-resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import lm_data
+from repro.models import model as M
+from repro.optim import AdamConfig, adam_init, cosine_schedule
+from repro.runtime import fault
+from repro.runtime.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    ckpt_dir: str | None = None
+    ckpt_every: int = 25
+    log_every: int = 10
+    seed: int = 0
+    step_timeout_s: float = 0.0        # 0 = watchdog off
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.model = M.build(cfg)
+        self.ocfg = AdamConfig(lr=tcfg.lr, moment_dtype=cfg.param_dtype)
+        self.lr_fn = cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        self.step_fn = jax.jit(make_train_step(self.model, self.ocfg, self.lr_fn),
+                               donate_argnums=(0, 1))
+        self.data_cfg = lm_data.DataConfig(
+            vocab=cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.manager = (CheckpointManager(tcfg.ckpt_dir)
+                        if tcfg.ckpt_dir else None)
+        self.stats = fault.StepStats()
+
+    def init_state(self):
+        params, _ = self.model.init(jax.random.key(self.tcfg.seed))
+        return {"params": params, "opt": adam_init(params, self.ocfg)}
+
+    def run(self, on_metrics: Callable[[int, dict], None] | None = None):
+        state, start = self.init_state(), 0
+        if self.manager is not None:
+            restored = self.manager.restore_latest(state)
+            if restored is not None:
+                state, start = restored
+        history = []
+        for step in range(start, self.tcfg.total_steps):
+            batch = jax.tree_util.tree_map(
+                jnp.asarray, lm_data.host_batch(self.data_cfg, step))
+            t0 = time.perf_counter()
+            if self.tcfg.step_timeout_s > 0:
+                with fault.StepWatchdog(self.tcfg.step_timeout_s):
+                    state["params"], state["opt"], metrics = self.step_fn(
+                        state["params"], state["opt"], batch)
+                    jax.block_until_ready(metrics)
+            else:
+                state["params"], state["opt"], metrics = self.step_fn(
+                    state["params"], state["opt"], batch)
+                jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            straggler = self.stats.record(dt)
+            if straggler:
+                metrics = dict(metrics, straggler=True)
+            history.append(float(metrics["loss"]))
+            if on_metrics and step % self.tcfg.log_every == 0:
+                on_metrics(step, {k: (float(v) if hasattr(v, "item") else v)
+                                  for k, v in metrics.items()})
+            if self.manager is not None and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.manager.save_async(step + 1, state)
+        if self.manager is not None:
+            self.manager.wait()
+        return state, history

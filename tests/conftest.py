@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — tests run on the 1 real CPU device.
+# Only launch/dryrun.py and analysis/run_roofline.py request 512 placeholder
+# devices, in their own processes.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

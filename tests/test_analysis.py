@@ -1,0 +1,83 @@
+"""Roofline/HLO-parser correctness: loop multipliers, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_parse import analyze_hlo
+from repro.analysis.roofline import (analytic_bytes, model_flops, param_count)
+from repro.configs.base import SHAPES, get_config
+
+
+def test_scan_loop_multiplier_exact():
+    """An 8-iteration scanned matmul must report exactly 8x the body flops."""
+    L, B, D = 8, 32, 64
+
+    def model(x, ws):
+        def step(c, w):
+            return jnp.tanh(c @ w), None
+        x, _ = jax.lax.scan(step, x, ws)
+        return x
+
+    xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    txt = jax.jit(model).lower(xs, ws).compile().as_text()
+    s = analyze_hlo(txt)
+    expect = 2 * B * D * D * L
+    assert abs(s.flops - expect) / expect < 0.01, (s.flops, expect)
+    # and the once-count matches cost_analysis's known undercount
+    assert abs(s.dot_flops_once - expect / L) / (expect / L) < 0.01
+
+
+def test_unrolled_matches_scan_total():
+    B, D, L = 16, 32, 4
+
+    def scan_model(x, ws):
+        x, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return x
+
+    def unroll_model(x, ws):
+        for i in range(L):
+            x = x @ ws[i]
+        return x
+
+    xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    s1 = analyze_hlo(jax.jit(scan_model).lower(xs, ws).compile().as_text())
+    s2 = analyze_hlo(jax.jit(unroll_model).lower(xs, ws).compile().as_text())
+    assert abs(s1.flops - s2.flops) / s2.flops < 0.01
+
+
+def test_param_count_sane():
+    """Analytic parameter counts should land near the arch's nameplate."""
+    cases = {"llama3-405b": (380e9, 440e9),
+             "granite-3-2b": (2.0e9, 3.3e9),
+             "command-r-plus-104b": (95e9, 120e9),
+             "qwen2.5-14b": (12e9, 17e9),
+             "rwkv6-3b": (2.5e9, 3.9e9),
+             "qwen3-moe-235b-a22b": (200e9, 260e9),
+             "jamba-1.5-large-398b": (330e9, 420e9)}
+    for arch, (lo, hi) in cases.items():
+        total, active = param_count(get_config(arch))
+        assert lo <= total <= hi, (arch, total)
+        assert active <= total
+
+
+def test_moe_active_params():
+    total, active = param_count(get_config("qwen3-moe-235b-a22b"))
+    assert active < 0.25 * total          # 235B total vs 22B active
+
+
+def test_model_flops_monotone():
+    cfg = get_config("granite-3-2b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    assert t > p > d       # train(6ND, 1M tok) > prefill(2ND, 1M tok) > decode
+
+
+def test_analytic_bytes_decode_dominated_by_cache():
+    cfg = get_config("llama3-405b")
+    b = analytic_bytes(cfg, SHAPES["decode_32k"], 256)
+    params_b = param_count(cfg)[0] * 2 / 256
+    assert b > params_b      # KV cache read exceeds weight read at B=128

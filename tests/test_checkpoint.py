@@ -1,0 +1,95 @@
+"""Fault tolerance: atomic checkpoints, bitwise restart, corruption
+detection, retention, elastic (cross-mesh) restore."""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs.base import get_config
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (16, 8)),
+            "b": jnp.arange(8, dtype=jnp.float32),
+            "nested": {"m": jnp.ones((4,), jnp.bfloat16)}}
+
+
+def test_save_restore_bitwise(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 7, t)
+    assert latest_step(tmp_path) == 7
+    r = restore_checkpoint(tmp_path, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    d = save_checkpoint(tmp_path, 1, t)
+    man = json.loads((d / "manifest.json").read_text())
+    next(iter(man["arrays"].values()))["crc32"] ^= 0xDEADBEEF
+    (d / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(tmp_path, t)
+
+
+def test_atomic_no_partial_visible(tmp_path):
+    # a .tmp dir must never be picked up as a checkpoint
+    (tmp_path / "step_9.tmp").mkdir(parents=True)
+    assert latest_step(tmp_path) is None
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [3, 4]
+    (r, step) = mgr.restore_latest(_tree())
+    assert step == 4
+
+
+def test_restart_bitwise_identical(tmp_path):
+    """Train 4 steps straight vs 2 steps -> crash -> resume 2 more: the
+    resulting parameters must be bitwise identical (deterministic data +
+    exact checkpoint)."""
+    cfg = get_config("granite-3-2b").smoke()
+    tc = dataclasses.replace if False else None
+    base = dict(total_steps=4, seq_len=32, global_batch=4, ckpt_every=2,
+                log_every=100)
+    t_full = Trainer(cfg, TrainerConfig(**base))
+    state_full, hist_full = t_full.run()
+
+    ckdir = tmp_path / "ck"
+    t_a = Trainer(cfg, TrainerConfig(**{**base, "total_steps": 2},
+                                     ckpt_dir=str(ckdir)))
+    t_a.run()
+    # "crash": new trainer process resumes from latest checkpoint
+    t_b = Trainer(cfg, TrainerConfig(**base, ckpt_dir=str(ckdir)))
+    state_b, hist_b = t_b.run()
+
+    for a, b in zip(jax.tree_util.tree_leaves(state_full["params"]),
+                    jax.tree_util.tree_leaves(state_b["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_dtype_and_shape(tmp_path):
+    """Restore with a different target structure dtype (elastic re-shard is
+    exercised in test_sharding via subprocess; here: dtype casting path)."""
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t)
+    r = restore_checkpoint(tmp_path, like)
+    for leaf in jax.tree_util.tree_leaves(r):
+        assert leaf.dtype == jnp.float32

@@ -1,0 +1,73 @@
+"""int8 gradient compression: error bounds, error feedback, wire math."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import compression as C
+
+
+@hp.given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+@hp.settings(max_examples=50, deadline=None)
+def test_block_quant_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, (4, C.BLOCK)), jnp.float32)
+    q, s = C._quantize_block(x)
+    deq = q.astype(jnp.float32) * s
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 / 2 + 1e-5
+    assert bool(jnp.all(jnp.abs(deq - x) <= bound + 1e-6))
+
+
+def test_error_feedback_reduces_bias(rng):
+    g = {"w": jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)}
+    # two rounds with feedback: total transmitted ~ g1+g2 with residual carry
+    sent1, res = C.compression_error_feedback(g, None)
+    sent2, res2 = C.compression_error_feedback(g, res)
+    # the residual is exactly what quantization dropped
+    for leaf, r in zip(jax.tree_util.tree_leaves(sent1),
+                       jax.tree_util.tree_leaves(res)):
+        assert float(jnp.max(jnp.abs(r))) <= float(jnp.max(jnp.abs(leaf))) / 127.0 + 1e-6
+
+
+_PSUM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compression import make_compressed_allreduce
+
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, (1024,)), jnp.float32)
+    ar = make_compressed_allreduce(mesh, axis="pod")
+    out = ar({"g": g})["g"]          # every peer holds the same g -> mean = g
+    err = float(jnp.max(jnp.abs(out - g)))
+    print(json.dumps({"err": err}))
+""")
+
+
+def test_compressed_allreduce_subprocess():
+    r = subprocess.run([sys.executable, "-c", _PSUM], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    err = json.loads(r.stdout.strip().splitlines()[-1])["err"]
+    # quantize->sum->dequant of identical replicas: error <= one quant step
+    assert err <= 4.0 / 127.0
+
+
+def test_wire_bytes_ratio(rng):
+    """Compression claim: int8 payload is ~4x smaller than f32."""
+    x = jnp.asarray(rng.normal(0, 1, (4096,)), jnp.float32)
+    q, s = C._quantize_block(x.reshape(-1, C.BLOCK))
+    f32_bytes = x.size * 4
+    wire = q.size * 1 + s.size * 4
+    assert wire < f32_bytes / 3.5

@@ -1,0 +1,82 @@
+"""Bit-exactness and bound properties of the Qm.n fixed-point substrate."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed_point as fxp
+
+I32 = st.integers(-2**31, 2**31 - 1)
+
+
+def _wrap32(x: np.ndarray) -> np.ndarray:
+    return ((x + 2**31) % 2**32 - 2**31).astype(np.int64)
+
+
+@hp.given(st.lists(I32, min_size=1, max_size=64),
+          st.lists(I32, min_size=1, max_size=64))
+@hp.settings(max_examples=100, deadline=None)
+def test_fixed_mul_truncation_bit_exact(a, b):
+    n = min(len(a), len(b))
+    a = np.array(a[:n], np.int64)
+    b = np.array(b[:n], np.int64)
+    cfg = fxp.FixedPointConfig(32, 16, round_nearest=False)
+    got = np.asarray(fxp.fixed_mul(jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(b, jnp.int32), cfg), np.int64)
+    want = _wrap32((a * b) >> 16)
+    np.testing.assert_array_equal(got, want)
+
+
+@hp.given(st.lists(I32, min_size=1, max_size=64),
+          st.lists(I32, min_size=1, max_size=64))
+@hp.settings(max_examples=100, deadline=None)
+def test_fixed_mul_rounding_bit_exact(a, b):
+    n = min(len(a), len(b))
+    a = np.array(a[:n], np.int64)
+    b = np.array(b[:n], np.int64)
+    cfg = fxp.FixedPointConfig(32, 16, round_nearest=True)
+    got = np.asarray(fxp.fixed_mul(jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(b, jnp.int32), cfg), np.int64)
+    want = _wrap32(((a * b) >> 16) + (((a * b) >> 15) & 1))
+    np.testing.assert_array_equal(got, want)
+
+
+@hp.given(st.floats(-30000.0, 30000.0))
+@hp.settings(max_examples=200, deadline=None)
+def test_roundtrip_error_bound(x):
+    xf = fxp.from_fixed(fxp.to_fixed(jnp.float32(x)), fxp.Q16_16)
+    assert abs(float(xf) - np.float32(x)) <= 2 ** -16
+
+
+@pytest.mark.parametrize("cfg", [fxp.Q16_16, fxp.FixedPointConfig(32, 20),
+                                 fxp.FixedPointConfig(32, 8)])
+def test_fixed_matmul_matches_float(cfg, rng):
+    x = rng.uniform(-2, 2, (8, 16)).astype(np.float32)
+    w = rng.uniform(-2, 2, (16, 4)).astype(np.float32)
+    got = fxp.from_fixed(fxp.fixed_matmul(fxp.to_fixed(jnp.asarray(x), cfg),
+                                          fxp.to_fixed(jnp.asarray(w), cfg), cfg), cfg)
+    tol = 16 * 4.0 * 2 ** -cfg.frac_bits + 1e-4
+    np.testing.assert_allclose(np.asarray(got), x @ w, atol=tol)
+
+
+def test_plan_sigmoid_literature_bound():
+    x = jnp.linspace(-10, 10, 4001)
+    err = jnp.max(jnp.abs(fxp.sigmoid_plan_f32(x) - jax.nn.sigmoid(x)))
+    assert float(err) <= 0.0190            # Amin et al. 1997 bound (~0.0189)
+
+
+def test_fixed_sigmoid_matches_float_plan(rng):
+    x = rng.uniform(-8, 8, 512).astype(np.float32)
+    qx = fxp.to_fixed(jnp.asarray(x))
+    got = fxp.from_fixed(fxp.fixed_sigmoid_plan(qx), fxp.Q16_16)
+    want = fxp.sigmoid_plan_f32(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+def test_saturating_add():
+    cfg = fxp.FixedPointConfig(32, 16, saturate=True)
+    big = jnp.asarray([2**31 - 10], jnp.int32)
+    out = fxp.fixed_add(big, big, cfg)
+    assert int(out[0]) == cfg.max_int

@@ -1,0 +1,83 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv2d import conv2d, conv2d_ref
+from repro.kernels.maxpool2d import maxpool2d, maxpool2d_ref
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_ref
+from repro.kernels.sigmoid_pla import sigmoid_pla, sigmoid_pla_ref
+
+
+@pytest.mark.parametrize("B,H,W,ci,co,kh,kw,pad,sig,stride", [
+    (2, 28, 28, 1, 1, 2, 2, "SAME", True, 1),     # smallNet conv1
+    (2, 14, 14, 1, 1, 2, 2, "SAME", True, 1),     # smallNet conv2
+    (1, 16, 16, 3, 8, 3, 3, "SAME", False, 1),
+    (3, 16, 12, 4, 4, 2, 2, "VALID", False, 1),
+    (1, 32, 32, 2, 6, 5, 5, "SAME", False, 2),
+    (2, 8, 8, 8, 16, 1, 1, "VALID", False, 1),
+])
+def test_conv2d_vs_ref(B, H, W, ci, co, kh, kw, pad, sig, stride, rng):
+    x = jnp.asarray(rng.normal(size=(B, H, W, ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(kh, kw, ci, co)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(co,)), jnp.float32)
+    got = conv2d(x, w, b, padding=pad, apply_sigmoid=sig, stride=stride)
+    want = conv2d_ref(x, w, b, padding=pad, apply_sigmoid=sig, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("M,K,N", [
+    (64, 49, 10),        # smallNet dense
+    (256, 512, 256),     # aligned
+    (100, 300, 70),      # unaligned -> wrapper pads
+    (8, 128, 8),
+    (513, 257, 129),
+])
+def test_quant_matmul_vs_ref(M, K, N, rng):
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    sx = jnp.asarray(rng.uniform(0.01, 0.1, (M,)), jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.01, 0.1, (N,)), jnp.float32)
+    got = quant_matmul(xq, wq, sx, sw)
+    want = quant_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_quant_matmul_int32_exactness(rng):
+    # accumulation must be exact int32 (no float roundoff): compare against
+    # numpy int64 accumulation
+    xq = rng.integers(-127, 128, (32, 1024)).astype(np.int8)
+    wq = rng.integers(-127, 128, (1024, 16)).astype(np.int8)
+    got = np.asarray(quant_matmul(jnp.asarray(xq), jnp.asarray(wq), 1.0, 1.0))
+    want = (xq.astype(np.int64) @ wq.astype(np.int64)).astype(np.float64)
+    np.testing.assert_array_equal(got.astype(np.int64), want.astype(np.int64))
+
+
+@pytest.mark.parametrize("shape", [(7,), (33, 5), (2, 3, 4, 5), (1000,), (256, 128)])
+@pytest.mark.parametrize("scale", [0.1, 4.0, 20.0])
+def test_sigmoid_pla_vs_ref(shape, scale, rng):
+    x = jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+    np.testing.assert_allclose(np.asarray(sigmoid_pla(x)),
+                               np.asarray(sigmoid_pla_ref(x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,W,C", [(2, 28, 28, 1), (1, 14, 14, 1),
+                                     (2, 15, 9, 2), (3, 8, 8, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxpool2d_vs_ref(B, H, W, C, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(B, H, W, C)), dtype)
+    got = maxpool2d(x)
+    want = maxpool2d_ref(x)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got.astype(jnp.float32)),
+                                  np.asarray(want.astype(jnp.float32)))
+
+
+def test_conv2d_vmem_guard():
+    x = jnp.zeros((1, 1024, 1024, 8), jnp.float32)
+    w = jnp.zeros((3, 3, 8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        conv2d(x, w)

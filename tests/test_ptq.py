@@ -1,0 +1,63 @@
+"""Post-training quantization properties (the paper's train->bake flow)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ptq
+
+
+@hp.given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+@hp.settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, (16, 8)), jnp.float32)
+    qt = ptq.quantize(x)
+    err = jnp.abs(qt.dequantize() - x)
+    # symmetric int8: per-channel error <= scale/2 = absmax/254
+    bound = jnp.max(jnp.abs(x), axis=0, keepdims=True) / 127.0 / 2.0 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+def test_per_channel_beats_per_tensor(rng):
+    # one loud channel: per-channel scales must hurt the quiet channels less
+    x = np.ones((64, 4), np.float32)
+    x[:, 0] *= 100.0
+    xq_pc = ptq.quantize(jnp.asarray(x), ptq.QuantConfig(per_channel=True))
+    xq_pt = ptq.quantize(jnp.asarray(x), ptq.QuantConfig(per_channel=False))
+    err_pc = float(jnp.abs(xq_pc.dequantize() - x)[:, 1:].max())
+    err_pt = float(jnp.abs(xq_pt.dequantize() - x)[:, 1:].max())
+    assert err_pc < err_pt
+
+
+def test_quantize_tree_structure(rng):
+    params = {"dense": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                        "b": jnp.zeros((4,), jnp.float32)},
+              "norm": jnp.ones((8,), jnp.float32)}
+    qp = ptq.quantize_tree(params)
+    assert isinstance(qp["dense"]["w"], ptq.QuantTensor)
+    assert not isinstance(qp["dense"]["b"], ptq.QuantTensor)   # 1-D stays float
+    deq = ptq.dequantize_tree(qp)
+    assert deq["dense"]["w"].shape == (8, 4)
+    errs = ptq.quantization_error(params, qp)
+    assert all(v < 0.02 for v in errs.values())
+
+
+def test_quantized_matmul_accuracy(rng):
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    xq = ptq.quantize(x, ptq.QuantConfig(per_channel=False))
+    wq = ptq.quantize(w)
+    got = ptq.quantized_matmul_ref(xq, ptq.QuantTensor(wq.q, wq.scale.reshape(-1)))
+    rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02
+
+
+def test_activation_calibration(rng):
+    samples = jnp.asarray(rng.normal(size=(1024,)), jnp.float32)
+    s = ptq.calibrate_activation_scale(samples)
+    q = ptq.quantize_activation(samples, s)
+    assert q.q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(q.dequantize() - samples))) <= float(s.reshape(())) / 2 + 1e-6

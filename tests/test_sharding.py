@@ -1,0 +1,173 @@
+"""Sharding policy properties + subprocess multi-device compile/elastic tests.
+
+The subprocess tests set XLA_FLAGS themselves (8 virtual devices) so the
+rest of the suite keeps the 1-device default.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.distributed import sharding as shd
+
+
+def test_rules_divisibility_all_cells():
+    """Every (arch x shape) cell must produce mesh-divisible specs for the
+    dims the policy shards (the invariant the dry-run relies on)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            for axes in (("data", "model"), ("pod", "data", "model")):
+                rules = shd.make_rules(
+                    mesh_axes=axes, global_batch=s.global_batch,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    decode=(s.kind == "decode"), seq_len=s.seq_len)
+                data_size = 32 if "pod" in axes else 16
+                if rules["batch"] == ("pod", "data"):
+                    assert s.global_batch % 32 == 0
+                elif rules["batch"] == ("data",):
+                    assert s.global_batch % 16 == 0
+                if rules["heads"] == "model":
+                    assert cfg.n_heads % 16 == 0
+                if rules["res_seq"] == "model":
+                    assert s.seq_len % 16 == 0
+                # dims the policy always shards over "model"
+                assert cfg.d_model % 16 == 0
+                assert cfg.head_dim % 16 == 0 or rules["cache_head_dim"] != "model" \
+                    or cfg.head_dim in (64, 128)
+                assert cfg.vocab_padded % 256 == 0
+
+
+@hp.given(st.integers(1, 4096), st.integers(1, 256), st.integers(1, 256))
+@hp.settings(max_examples=100, deadline=None)
+def test_rules_batch_never_uneven(batch, heads, kv):
+    rules = shd.make_rules(mesh_axes=("data", "model"), global_batch=batch,
+                           n_heads=heads, n_kv_heads=kv, seq_len=64)
+    if rules["batch"] is not None:
+        assert batch % 16 == 0
+    if rules["heads"] == "model":
+        assert heads % 16 == 0
+
+
+def test_constrain_noop_without_rules():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, "batch", None)
+    assert y is x
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.configs.base import get_config, ShapeSpec
+    from repro.launch.lowering import lower_cell
+    from repro.configs import base as cbase
+
+    # shrink the production mesh to 2x4 for the smoke-scale compile
+    import repro.launch.mesh as mesh_mod
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    import repro.distributed.sharding as shd
+    cfg = dataclasses.replace(get_config("granite-3-2b").smoke(),
+                              d_model=64, micro_batch=4)
+    shape = ShapeSpec("t", 64, 8, "train")
+    cbase.SHAPES["t"] = shape
+    def rules_for(cfg, shape, mesh):
+        return {"batch": ("data",), "res_seq": "model", "seq": None,
+                "heads": "model", "kv_heads": None, "head_dim": None,
+                "qkv": "model", "ffn": "model", "vocab": "model",
+                "experts": "model", "expert_group": ("data",),
+                "cache_batch": ("data",), "cache_head_dim": "model",
+                "fsdp": ("data",), "w_model": "model", "layers": None,
+                "embed": None}
+    import repro.launch.lowering as L
+    L.rules_for = rules_for
+    art = L.lower_cell("granite-3-2b", "t", mesh, cfg_override=cfg)
+    ma = art.compiled.memory_analysis()
+    print(json.dumps({"ok": True, "arg_bytes": int(ma.argument_size_in_bytes)}))
+""")
+
+
+def test_multi_device_compile_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"]
+
+
+_ELASTIC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint
+
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    d = tempfile.mkdtemp()
+    save_checkpoint(d, 1, tree)              # saved unsharded ("mesh A")
+
+    # "mesh B": restore sharded over 8 devices (elastic re-shard)
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    r = restore_checkpoint(d, tree, shardings=sh)
+    ok = (r["w"].sharding == sh["w"]
+          and bool(jnp.all(r["w"] == tree["w"])))
+    print(json.dumps({"ok": bool(ok)}))
+""")
+
+
+def test_elastic_restore_subprocess():
+    r = subprocess.run([sys.executable, "-c", _ELASTIC], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert json.loads(r.stdout.strip().splitlines()[-1])["ok"]
+
+
+_INT8_LOWER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax
+    from repro.configs.base import get_config, ShapeSpec
+    from repro.configs import base as cbase
+    import repro.launch.lowering as L
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = dataclasses.replace(get_config("granite-3-2b").smoke(), d_model=64)
+    cbase.SHAPES["d"] = ShapeSpec("d", 64, 8, "decode")
+    rules = {"batch": ("data",), "res_seq": None, "seq": None, "heads": "model",
+             "kv_heads": None, "kv_seq": None, "head_dim": None, "qkv": "model",
+             "ffn": "model", "vocab": "model", "experts": "model",
+             "expert_group": ("data",), "cache_batch": ("data",),
+             "cache_head_dim": "model", "cache_seq": "model",
+             "fsdp": ("data",), "w_model": "model", "layers": None, "embed": None}
+    L.rules_for = lambda cfg, shape, mesh: rules
+    art = L.lower_cell("granite-3-2b", "d", mesh, cfg_override=cfg,
+                       int8_serving=True)
+    ma = art.compiled.memory_analysis()
+    print(json.dumps({"ok": True, "args": int(ma.argument_size_in_bytes)}))
+""")
+
+
+def test_int8_serving_lowering_subprocess():
+    """The paper's baked-int8 deployment compiles on a sharded mesh."""
+    r = subprocess.run([sys.executable, "-c", _INT8_LOWER], capture_output=True,
+                       text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert json.loads(r.stdout.strip().splitlines()[-1])["ok"]
