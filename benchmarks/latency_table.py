@@ -13,8 +13,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import deploy, smallnet
+from repro.core import backends, deploy, smallnet
 from repro.data import synth_mnist
+from repro.serving.vision_engine import VisionEngine
 
 # smallNet single-image inference cost (analytic)
 _FLOPS = (28 * 28 * 4 * 2          # conv1 2x2 MACs
@@ -57,6 +58,18 @@ def run(trained):
         baked8(x).block_until_ready()
     rows.append(("latency/deployed_int8", (time.perf_counter() - t0) / 100 * 1e6,
                  "per image"))
+
+    # backend sweep through the streaming vision engine: every registered
+    # substrate serves the same 128-request single-image workload in batched
+    # jitted steps (the serving-path numbers, queue wait included)
+    reqs = synth_mnist.make_dataset(128, seed=5)[0]
+    for name in backends.list_backends():
+        eng = VisionEngine(params, backend=name, batch_size=32)
+        eng.serve(list(reqs))
+        s = eng.stats()
+        rows.append((f"latency/engine_{name}", s["latency_mean_ms"] * 1e3,
+                     f"p50={s['latency_p50_ms']:.2f}ms p95={s['latency_p95_ms']:.2f}ms "
+                     f"qps={s['throughput_qps']:.0f} n={s['n']} batch={s['batch_size']}"))
 
     # TPU v5e roofline estimate for the deployed conv pipeline
     comp = _FLOPS / 197e12

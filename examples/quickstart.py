@@ -2,22 +2,28 @@
 
 Trains smallNet in float (the Keras counterpart), extracts + converts the
 weights to two's-complement fixed point, "bakes" them into the compiled
-program, and compares the accuracy ladder float -> PLAN -> fixed -> int8.
+program, compares the accuracy ladder float -> PLAN -> fixed -> int8, then
+demos the backend registry (one network graph, swappable substrates) and the
+streaming vision serving engine.
 
-    PYTHONPATH=src python examples/quickstart.py [--epochs 16]
+    PYTHONPATH=src python examples/quickstart.py [--epochs 16] [--backend pallas]
 """
 import argparse
 
 import jax.numpy as jnp
 
-from repro.core import deploy, smallnet
+from repro.core import backends, deploy, smallnet
 from repro.data import synth_mnist
+from repro.serving.vision_engine import VisionEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=12)
     ap.add_argument("--n-train", type=int, default=6000)
+    ap.add_argument("--backend", default="pallas",
+                    choices=backends.list_backends(),
+                    help="inference substrate for the serving demo")
     args = ap.parse_args()
 
     print("== 1. train float smallNet (paper §III-A: Adam, batch 64) ==")
@@ -37,7 +43,27 @@ def main():
     for name, acc in deploy.evaluate_all_paths(res.params, n_test=1500).items():
         print(f"   {name:24s} {acc:.4f}")
 
-    print("== 4. latency (paper §IV-B: 560 ms CPU -> 109 ms FPGA, 5.1x) ==")
+    print("== 4. backend registry: one graph, every substrate ==")
+    xb, yb = synth_mnist.make_dataset(256, seed=4)
+    xb = jnp.asarray(xb)
+    ref_pred = smallnet.predict(smallnet.apply(res.params, xb, backend="ref"))
+    for name in backends.list_backends():
+        scores = smallnet.apply(res.params, xb, backend=name)  # float params in
+        agree = float((smallnet.predict(scores) == ref_pred).mean())
+        acc = float((smallnet.predict(scores) == jnp.asarray(yb)).mean())
+        print(f"   backend={name:12s} acc={acc:.4f} argmax-agreement-vs-ref={agree:.4f}")
+
+    print(f"== 5. streaming vision engine on backend={args.backend!r} ==")
+    eng = VisionEngine(res.params, backend=args.backend, batch_size=32)
+    eng.serve(list(synth_mnist.make_dataset(128, seed=6)[0]))
+    s = eng.stats()
+    print(f"   served n={s['n']} in {s['batches']} batched steps "
+          f"(batch={s['batch_size']}, padded_slots={s['padded_slots']})")
+    print(f"   latency mean={s['latency_mean_ms']:.2f}ms "
+          f"p50={s['latency_p50_ms']:.2f}ms p95={s['latency_p95_ms']:.2f}ms "
+          f"throughput={s['throughput_qps']:.0f} img/s")
+
+    print("== 6. latency (paper §IV-B: 560 ms CPU -> 109 ms FPGA, 5.1x) ==")
     sw = deploy.measure_latency(smallnet.forward, res.params)
     print(f"   deployed-baked latency: {sw*1e3:.3f} ms/image on this host")
 

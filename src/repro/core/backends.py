@@ -1,0 +1,330 @@
+"""Backend dispatch for smallNet — one network graph, swappable substrates.
+
+The paper's whole point is one datapath (windowing -> parallel MAC -> bias ->
+PLAN sigmoid -> maxpool) realized on different substrates: a Keras float
+model on the PS-side CPU and a fixed-point Verilog pipeline in the fabric.
+This module makes that explicit: the network graph lives once in
+`smallnet.apply`, and a *backend* supplies the five layer primitives
+
+    conv2x2_same(x, w, b)   pre-activation 2x2 SAME conv
+    maxpool2x2(x)           2x2/2 max pool
+    dense(x, w, b)          pre-activation fully-connected layer
+    sigmoid(x)              the activation unit
+    quantize_params(params) float pytree -> backend-native parameters
+
+plus optional layout hooks (`ingest`, `flatten`, `fused_conv_act`) for
+substrates whose tensor format differs from NHWC float (the fixed-point
+path carries (B, H, W) int32 words, exactly the Verilog BRAM layout).
+
+Registered backends (mirroring TinyCNN/ZynqNet-style swappable layer
+engines over one fixed graph):
+
+    ref          float32 XLA ops, exact sigmoid — the Keras counterpart
+    plan         float32 XLA ops, PLAN piecewise-linear sigmoid
+    pallas       Pallas TPU kernels (conv2d with fused-sigmoid epilogue,
+                 maxpool2d comparator tree), exact sigmoid — matches `ref`
+    pallas_plan  Pallas kernels with the fused conv+PLAN epilogue and the
+                 sigmoid_pla VPU kernel — matches `plan`
+    fixed        bit-faithful Qm.n two's-complement datapath (§III-B)
+    int8         TPU-native PTQ: int8 dense MAC through the quant_matmul
+                 MXU kernel, dequant-on-use convs, PLAN sigmoid
+
+Usage:
+
+    from repro.core import smallnet
+    scores = smallnet.apply(params, images, backend="pallas")
+
+`apply` accepts float params for every backend (they are quantized on the
+way in, idempotently), or pre-quantized params produced by the backend's
+own `quantize_params`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core import ptq
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.maxpool2d.ops import maxpool2d
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.sigmoid_pla.ops import sigmoid_pla
+
+
+# ---------------------------------------------------------------------------
+# Shared float primitives (the XLA reference datapath)
+# ---------------------------------------------------------------------------
+
+def conv_same_2x2(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """2x2 SAME conv, NHWC/HWIO. Keras pads SAME for even kernels as
+    (0 before, 1 after) on each spatial dim."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=((0, 1), (0, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def maxpool_2x2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point primitives (the Verilog datapath, emulated bit-exactly)
+# ---------------------------------------------------------------------------
+
+def windows_2x2_same(x: jnp.ndarray) -> jnp.ndarray:
+    """The windowing module: (B,H,W) -> (B,H,W,4) of 2x2 patches with SAME
+    (0 before, 1 after) zero padding. Mirrors the Verilog line-buffer."""
+    xp = jnp.pad(x, ((0, 0), (0, 1), (0, 1)))
+    return jnp.stack([xp[:, :-1, :-1], xp[:, :-1, 1:],
+                      xp[:, 1:, :-1], xp[:, 1:, 1:]], axis=-1)
+
+
+def conv_fixed(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray,
+               cfg: fxp.FixedPointConfig) -> jnp.ndarray:
+    """Fixed-point conv: 4 parallel MACs per output pixel + bias add.
+    x (B,H,W) int32 fixed; w4 (4,) int32 fixed; b () int32 fixed."""
+    win = windows_2x2_same(x)                             # (B,H,W,4)
+    prods = fxp.fixed_mul(win, w4.reshape(1, 1, 1, 4), cfg)
+    acc = jnp.sum(prods, axis=-1, dtype=jnp.int32)        # MAC accumulate
+    return fxp.fixed_add(acc, b, cfg)
+
+
+def maxpool_fixed(x: jnp.ndarray) -> jnp.ndarray:
+    """(B,H,W) int32 -> (B,H/2,W/2): comparator tree, exact in any format."""
+    return jnp.maximum(jnp.maximum(x[:, ::2, ::2], x[:, ::2, 1::2]),
+                       jnp.maximum(x[:, 1::2, ::2], x[:, 1::2, 1::2]))
+
+
+# ---------------------------------------------------------------------------
+# Backend base class + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Float32 XLA reference backend ("ref"); base class for all others.
+
+    Subclasses override the five primitives; the layout hooks have sane
+    float/NHWC defaults.  Instances are immutable so they can be closed
+    over by jit without hashing surprises.
+    """
+    name: str = "ref"
+    sigmoid_fn: Callable[[jnp.ndarray], jnp.ndarray] = jax.nn.sigmoid
+
+    # -- the five primitives ------------------------------------------------
+    def quantize_params(self, params):
+        """Float param pytree -> backend-native params (identity here)."""
+        return params
+
+    def conv2x2_same(self, x, w, b):
+        return conv_same_2x2(x, w, b)
+
+    def maxpool2x2(self, x):
+        return maxpool_2x2(x)
+
+    def dense(self, x, w, b):
+        return x @ w + b
+
+    def sigmoid(self, x):
+        return self.sigmoid_fn(x)
+
+    # -- layout hooks -------------------------------------------------------
+    def params_native(self, params) -> bool:
+        """True if `params` are already in this backend's native format."""
+        return True
+
+    def prepare_params(self, params):
+        """Idempotent: quantize float params, pass native params through."""
+        return params if self.params_native(params) else self.quantize_params(params)
+
+    def ingest(self, images):
+        """(B,28,28,1) float images -> backend activation tensor."""
+        return images
+
+    def flatten(self, x):
+        return x.reshape(x.shape[0], -1)
+
+    def fused_conv_act(self, x, w, b):
+        """conv + activation; backends with a fused epilogue override this."""
+        return self.sigmoid(self.conv2x2_same(x, w, b))
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend | None = None):
+    """Register a backend instance under `name`.
+
+    Usable directly — ``register_backend("ref", Backend())`` — or as a
+    class decorator::
+
+        @register_backend("mine")
+        @dataclasses.dataclass(frozen=True)
+        class MyBackend(Backend): ...
+    """
+    if backend is not None:
+        _REGISTRY[name] = backend
+        return backend
+
+    def deco(cls):
+        _REGISTRY[name] = cls() if isinstance(cls, type) else cls
+        return cls
+    return deco
+
+
+def get_backend(backend: str | Backend) -> Backend:
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {backend!r}; registered: {list_backends()}") from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Float backends: ref / plan
+# ---------------------------------------------------------------------------
+
+register_backend("ref", Backend())
+register_backend("plan", Backend(name="plan", sigmoid_fn=fxp.sigmoid_plan_f32))
+
+
+# ---------------------------------------------------------------------------
+# Pallas backends: the kernels/ wrappers wired into the model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(Backend):
+    """Runs convs + pools through the Pallas TPU kernels.
+
+    `activation` selects the fused conv epilogue: "sigmoid" (exact, matches
+    "ref") or "plan" (the PLAN piecewise-linear epilogue, matches "plan");
+    the standalone activation after the dense layer uses the matching
+    implementation (sigmoid_pla VPU kernel for "plan").
+    `interpret=True` runs the kernels in the Pallas interpreter so the
+    backend works on CPU hosts; flip to False on real TPUs.
+    """
+    name: str = "pallas"
+    activation: str = "sigmoid"
+    interpret: bool = True
+
+    def conv2x2_same(self, x, w, b):
+        return conv2d(x, w, b, padding="SAME",
+                                interpret=self.interpret)
+
+    def fused_conv_act(self, x, w, b):
+        # the fused epilogue: bias + activation inside the conv kernel
+        return conv2d(x, w, b, padding="SAME",
+                                activation=self.activation,
+                                interpret=self.interpret)
+
+    def maxpool2x2(self, x):
+        return maxpool2d(x, interpret=self.interpret)
+
+    def sigmoid(self, x):
+        if self.activation == "plan":
+            return sigmoid_pla(x, interpret=self.interpret)
+        return jax.nn.sigmoid(x)
+
+
+register_backend("pallas", PallasBackend())
+register_backend("pallas_plan", PallasBackend(name="pallas_plan",
+                                              activation="plan"))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point backend: the paper's Verilog datapath
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FixedBackend(Backend):
+    """Bit-faithful Qm.n two's-complement path (paper §III-B, Fig. 4).
+
+    Activations are (B, H, W) int32 words (no channel dim — the fabric
+    streams one feature map); images are quantized at the input port, and
+    the returned class scores are fixed-point int32.
+    """
+    name: str = "fixed"
+    cfg: fxp.FixedPointConfig = fxp.Q16_16
+
+    def quantize_params(self, params):
+        """The paper's §III-B weight extraction: float Keras weights ->
+        two's-complement fixed point (int32 pytree)."""
+        return jax.tree_util.tree_map(lambda p: fxp.to_fixed(p, self.cfg), params)
+
+    def params_native(self, params) -> bool:
+        leaves = jax.tree_util.tree_leaves(params)
+        return bool(leaves) and all(
+            jnp.issubdtype(l.dtype, jnp.integer) for l in leaves)
+
+    def ingest(self, images):
+        # the paper streams 8-bit pixels via DMA; quantize at the port
+        return fxp.to_fixed(images[..., 0], self.cfg)     # (B,28,28)
+
+    def conv2x2_same(self, x, w, b):
+        # w (2,2,1,1) int32 -> the 4 MAC taps; b (1,) -> scalar bias word
+        return conv_fixed(x, w.reshape(4), b[0], self.cfg)
+
+    def maxpool2x2(self, x):
+        return maxpool_fixed(x)
+
+    def dense(self, x, w, b):
+        y = fxp.fixed_matmul(x, w, self.cfg)
+        return fxp.fixed_add(y, b.reshape(1, -1), self.cfg)
+
+    def sigmoid(self, x):
+        return fxp.fixed_sigmoid_plan(x, self.cfg)
+
+
+register_backend("fixed", FixedBackend())
+
+
+# ---------------------------------------------------------------------------
+# int8 backend: TPU-native PTQ with the quant_matmul MXU kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Int8Backend(Backend):
+    """int8 weights: dequant-on-use for the (tiny) convs, true int8 MAC for
+    the dense layer through the kernels/quant_matmul Pallas wrapper —
+    activations are quantized per-tensor on the fly, weights carry
+    per-channel scales, accumulation is exact int32 with a fused dequant
+    epilogue (the MXU analogue of the paper's DSP MAC array)."""
+    name: str = "int8"
+    qcfg: ptq.QuantConfig = ptq.QuantConfig()
+    interpret: bool = True
+
+    def quantize_params(self, params):
+        return ptq.quantize_tree(params, self.qcfg)
+
+    def params_native(self, params) -> bool:
+        return any(isinstance(l, ptq.QuantTensor)
+                   for l in jax.tree_util.tree_leaves(
+                       params, is_leaf=lambda x: isinstance(x, ptq.QuantTensor)))
+
+    def conv2x2_same(self, x, w, b):
+        w = w.dequantize() if isinstance(w, ptq.QuantTensor) else w
+        return conv_same_2x2(x, w, b)
+
+    def dense(self, x, w, b):
+        if not isinstance(w, ptq.QuantTensor):           # float fallback
+            return x @ w + b
+        xq = ptq.quantize(x, dataclasses.replace(self.qcfg, per_channel=False))
+        y = quant_matmul(xq.q, w.q, xq.scale.reshape(()),
+                            w.scale.reshape(-1), interpret=self.interpret)
+        return y + b
+
+    def sigmoid(self, x):
+        return fxp.sigmoid_plan_f32(x)
+
+
+register_backend("int8", Int8Backend())

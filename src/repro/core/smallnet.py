@@ -1,4 +1,4 @@
-"""smallNet — the paper's model, with float / fixed-point / int8 inference paths.
+"""smallNet — the paper's model over swappable inference backends.
 
 Architecture (paper §III-A, Fig. 2):
     conv 1 filter 2x2, stride 1, SAME, sigmoid
@@ -11,23 +11,23 @@ Architecture (paper §III-A, Fig. 2):
 Parameter count: (2*2*1*1 + 1) * 2 + 49*10 + 10 = 510 — matches the paper's
 "no more than 510 trainable parameters".
 
-Paths:
-  * forward()        — float32 reference (the paper's Keras counterpart)
-  * forward_plan()   — float32 but with the PLAN hardware sigmoid (isolates
-                       the activation-approximation part of the accuracy gap)
-  * forward_fixed()  — bit-faithful Qm.n two's-complement path: explicit
-                       windowing + MAC accumulate, PLAN sigmoid, exactly the
-                       paper's Verilog datapath (§III-B, Fig. 4)
-  * forward_int8()   — TPU-native int8 path (per-channel PTQ weights)
+The network graph lives ONCE in `apply(params, images, backend=...)`; a
+backend (core/backends.py) supplies the layer primitives.  Registered
+backends: "ref" (float32, the Keras counterpart), "plan" (float32 + PLAN
+hardware sigmoid), "pallas" / "pallas_plan" (the Pallas TPU kernels with
+fused conv epilogues), "fixed" (bit-faithful Qm.n two's-complement — exactly
+the paper's Verilog datapath, §III-B Fig. 4), "int8" (TPU-native PTQ with
+the quant_matmul MXU kernel).
+
+`forward` / `forward_plan` / `forward_fixed` / `forward_int8` remain as thin
+wrappers over `apply` for existing callers.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as B
 from repro.core import fixed_point as fxp
 from repro.core import ptq
 
@@ -46,36 +46,75 @@ def param_count(params: dict) -> int:
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
 
 
-def _conv_same_2x2(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """2x2 SAME conv, NHWC/HWIO. Keras pads SAME for even kernels as
-    (0 before, 1 after) on each spatial dim."""
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding=((0, 1), (0, 1)),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + b
+def apply(params: dict, images: jnp.ndarray, *,
+          backend: str | B.Backend = "ref") -> jnp.ndarray:
+    """Single entry point: images (B,28,28,1) -> class scores (B,10).
+
+    `params` may be float (quantizing backends convert them on the way in,
+    idempotently) or already backend-native (e.g. the int32 pytree from
+    `quantize_params_fixed`).  Scores are float in (0,1) for float-valued
+    backends and Qm.n int32 words for "fixed" — `predict` handles both.
+    """
+    be = B.get_backend(backend)
+    p = be.prepare_params(params)
+    x = be.ingest(images)
+    x = be.fused_conv_act(x, p["conv1"]["w"], p["conv1"]["b"])
+    x = be.maxpool2x2(x)
+    x = be.fused_conv_act(x, p["conv2"]["w"], p["conv2"]["b"])
+    x = be.maxpool2x2(x)
+    x = be.flatten(x)                                    # (B, 49)
+    return be.sigmoid(be.dense(x, p["dense"]["w"], p["dense"]["b"]))
 
 
-def _maxpool_2x2(x: jnp.ndarray) -> jnp.ndarray:
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-
+# ---------------------------------------------------------------------------
+# Thin wrappers (the historical per-path entry points)
+# ---------------------------------------------------------------------------
 
 def forward(params: dict, images: jnp.ndarray, *, sigmoid=jax.nn.sigmoid) -> jnp.ndarray:
-    """images (B,28,28,1) -> class scores (B,10)."""
-    x = sigmoid(_conv_same_2x2(images, params["conv1"]["w"], params["conv1"]["b"]))
-    x = _maxpool_2x2(x)
-    x = sigmoid(_conv_same_2x2(x, params["conv2"]["w"], params["conv2"]["b"]))
-    x = _maxpool_2x2(x)
-    x = x.reshape(x.shape[0], -1)                       # (B, 49)
-    return sigmoid(x @ params["dense"]["w"] + params["dense"]["b"])
+    """images (B,28,28,1) -> class scores (B,10). Float32 reference path."""
+    if sigmoid is jax.nn.sigmoid:
+        return apply(params, images, backend="ref")
+    if sigmoid is fxp.sigmoid_plan_f32:
+        return apply(params, images, backend="plan")
+    return apply(params, images, backend=B.Backend(name="custom", sigmoid_fn=sigmoid))
 
 
 def forward_plan(params: dict, images: jnp.ndarray) -> jnp.ndarray:
-    return forward(params, images, sigmoid=fxp.sigmoid_plan_f32)
+    return apply(params, images, backend="plan")
 
+
+def forward_fixed(qparams: dict, images: jnp.ndarray,
+                  cfg: fxp.FixedPointConfig = fxp.Q16_16) -> jnp.ndarray:
+    """Bit-faithful fixed-point inference. images float in [0,1] are
+    quantized at the input port (the paper streams 8-bit pixels via DMA);
+    returns fixed-point class scores (B,10) int32."""
+    be = B.get_backend("fixed") if cfg == fxp.Q16_16 else B.FixedBackend(cfg=cfg)
+    return apply(qparams, images, backend=be)
+
+
+def forward_int8(qparams: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """int8 weights (dequant-on-use for conv; int8 MAC dense through the
+    quant_matmul Pallas kernel)."""
+    return apply(qparams, images, backend="int8")
+
+
+def quantize_params_fixed(params: dict, cfg: fxp.FixedPointConfig = fxp.Q16_16) -> dict:
+    """The paper's §III-B weight extraction: float Keras weights ->
+    two's-complement fixed point, 'hardcoded' (returned as int32 pytree)."""
+    return B.FixedBackend(cfg=cfg).quantize_params(params)
+
+
+def quantize_params_int8(params: dict, cfg: ptq.QuantConfig = ptq.QuantConfig()) -> dict:
+    return ptq.quantize_tree(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Prediction / training objective
+# ---------------------------------------------------------------------------
 
 def predict(scores: jnp.ndarray) -> jnp.ndarray:
-    """The paper's 'Max Finder' module."""
+    """The paper's 'Max Finder' module (argmax is monotone, so it works on
+    float scores and fixed-point int32 words alike)."""
     return jnp.argmax(scores, axis=-1)
 
 
@@ -92,83 +131,6 @@ def loss_fn(params: dict, images: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarr
     logp = jax.nn.log_softmax(8.0 * (scores - 0.5))
     onehot = jax.nn.one_hot(labels, 10)
     return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
-
-
-# ---------------------------------------------------------------------------
-# Fixed-point path — the hardware datapath (windowing + MAC + PLAN sigmoid)
-# ---------------------------------------------------------------------------
-
-def quantize_params_fixed(params: dict, cfg: fxp.FixedPointConfig = fxp.Q16_16) -> dict:
-    """The paper's §III-B weight extraction: float Keras weights ->
-    two's-complement fixed point, 'hardcoded' (returned as int32 pytree)."""
-    return jax.tree_util.tree_map(lambda p: fxp.to_fixed(p, cfg), params)
-
-
-def _windows_2x2_same(x: jnp.ndarray) -> jnp.ndarray:
-    """The windowing module: (B,H,W) -> (B,H,W,4) of 2x2 patches with SAME
-    (0 before, 1 after) zero padding. Mirrors the Verilog line-buffer."""
-    xp = jnp.pad(x, ((0, 0), (0, 1), (0, 1)))
-    return jnp.stack([xp[:, :-1, :-1], xp[:, :-1, 1:],
-                      xp[:, 1:, :-1], xp[:, 1:, 1:]], axis=-1)
-
-
-def _conv_fixed(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray,
-                cfg: fxp.FixedPointConfig) -> jnp.ndarray:
-    """Fixed-point conv: 4 parallel MACs per output pixel + bias add.
-    x (B,H,W) int32 fixed; w4 (4,) int32 fixed; b () int32 fixed."""
-    win = _windows_2x2_same(x)                            # (B,H,W,4)
-    prods = fxp.fixed_mul(win, w4.reshape(1, 1, 1, 4), cfg)
-    acc = jnp.sum(prods, axis=-1, dtype=jnp.int32)        # MAC accumulate
-    return fxp.fixed_add(acc, b, cfg)
-
-
-def _maxpool_fixed(x: jnp.ndarray) -> jnp.ndarray:
-    """(B,H,W) int32 -> (B,H/2,W/2): comparator tree, exact in any format."""
-    return jnp.maximum(jnp.maximum(x[:, ::2, ::2], x[:, ::2, 1::2]),
-                       jnp.maximum(x[:, 1::2, ::2], x[:, 1::2, 1::2]))
-
-
-def forward_fixed(qparams: dict, images: jnp.ndarray,
-                  cfg: fxp.FixedPointConfig = fxp.Q16_16) -> jnp.ndarray:
-    """Bit-faithful fixed-point inference. images float in [0,1] are
-    quantized at the input port (the paper streams 8-bit pixels via DMA);
-    returns fixed-point class scores (B,10) int32."""
-    x = fxp.to_fixed(images[..., 0], cfg)                 # (B,28,28)
-    w1 = qparams["conv1"]["w"].reshape(4)
-    x = _conv_fixed(x, w1, qparams["conv1"]["b"][0], cfg)
-    x = fxp.fixed_sigmoid_plan(x, cfg)
-    x = _maxpool_fixed(x)                                  # (B,14,14)
-    w2 = qparams["conv2"]["w"].reshape(4)
-    x = _conv_fixed(x, w2, qparams["conv2"]["b"][0], cfg)
-    x = fxp.fixed_sigmoid_plan(x, cfg)
-    x = _maxpool_fixed(x)                                  # (B,7,7)
-    x = x.reshape(x.shape[0], 49)
-    x = fxp.fixed_matmul(x, qparams["dense"]["w"], cfg)
-    x = fxp.fixed_add(x, qparams["dense"]["b"].reshape(1, 10), cfg)
-    return fxp.fixed_sigmoid_plan(x, cfg)
-
-
-# ---------------------------------------------------------------------------
-# int8 path — TPU-native quantized inference
-# ---------------------------------------------------------------------------
-
-def quantize_params_int8(params: dict, cfg: ptq.QuantConfig = ptq.QuantConfig()) -> dict:
-    return ptq.quantize_tree(params, cfg)
-
-
-def forward_int8(qparams: dict, images: jnp.ndarray) -> jnp.ndarray:
-    """int8 weights (dequant-on-use for conv; int8 MAC for dense)."""
-    deq = ptq.dequantize_tree(qparams)
-    x = fxp.sigmoid_plan_f32(_conv_same_2x2(images, deq["conv1"]["w"], deq["conv1"]["b"]))
-    x = _maxpool_2x2(x)
-    x = fxp.sigmoid_plan_f32(_conv_same_2x2(x, deq["conv2"]["w"], deq["conv2"]["b"]))
-    x = _maxpool_2x2(x)
-    x = x.reshape(x.shape[0], -1)
-    # int8 MAC dense layer via the quantized-matmul path
-    xq = ptq.quantize(x, ptq.QuantConfig(per_channel=False))
-    wq = qparams["dense"]["w"]
-    y = ptq.quantized_matmul_ref(xq, ptq.QuantTensor(wq.q, wq.scale.reshape(-1)))
-    return fxp.sigmoid_plan_f32(y + deq["dense"]["b"])
 
 
 def accuracy(apply_fn, params, images, labels, batch: int = 256) -> float:

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom Pallas kernels for the paper's compute hot-spots (conv datapath,
+# comparator-tree pool, PLAN sigmoid, int8 MAC array).  Each package pairs a
+# kernel with a jit'd ops wrapper and a pure-jnp oracle; the backend
+# dispatch layer (core/backends.py) wires the wrappers into the model.
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.maxpool2d.ops import maxpool2d
+from repro.kernels.maxpool2d.ref import maxpool2d_ref
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.sigmoid_pla.ops import sigmoid_pla
+from repro.kernels.sigmoid_pla.ref import sigmoid_pla_ref

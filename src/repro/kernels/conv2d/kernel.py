@@ -10,7 +10,10 @@ bias -> activation, sequenced by an FSM.  TPU-native mapping:
                        paper's "one MAC per tap" parallelism but systolic
   BRAM feature maps -> VMEM blocks, double-buffered by the Pallas grid
                        pipeline (the grid schedule is the FSM)
-  bias + activation -> fused epilogue in the same kernel
+  bias + activation -> fused epilogue in the same kernel; `activation` picks
+                       the exact sigmoid or the PLAN piecewise-linear unit
+                       (the paper's shift-add hardware sigmoid), so the
+                       conv+PLAN fast path is a single kernel launch
 
 Grid: (batch,) — each program instance convolves one image; spatial dims are
 kept whole in VMEM (checked by the wrapper against the VMEM budget).
@@ -23,9 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.fixed_point import sigmoid_plan_f32
+
+_ACTIVATIONS = (None, "sigmoid", "plan")
+
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
-                 apply_sigmoid: bool):
+                 activation: str | None):
     H, W, cout = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
     cin = x_ref.shape[3]
     acc = jnp.zeros((H * W, cout), jnp.float32)
@@ -35,21 +42,29 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
             acc = acc + jnp.dot(win.reshape(H * W, cin), w_ref[dh, dw],
                                 preferred_element_type=jnp.float32)
     acc = acc + b_ref[...]                                    # bias add
-    if apply_sigmoid:                                         # activation unit
+    if activation == "sigmoid":                               # activation unit
         acc = jax.nn.sigmoid(acc)
+    elif activation == "plan":
+        acc = sigmoid_plan_f32(acc)
     o_ref[...] = acc.reshape(1, H, W, cout)
 
 
 def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
                   apply_sigmoid: bool = False,
+                  activation: str | None = None,
                   interpret: bool = True) -> jnp.ndarray:
     """x (B, H+kh-1, W+kw-1, Cin) pre-padded; w (kh, kw, Cin, Cout); b (Cout,).
-    Returns (B, H, W, Cout) f32."""
+    Returns (B, H, W, Cout) f32.  `activation` in {None, "sigmoid", "plan"}
+    selects the fused epilogue (`apply_sigmoid=True` is legacy spelling for
+    "sigmoid")."""
+    if activation is None and apply_sigmoid:
+        activation = "sigmoid"
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
     B, Hp, Wp, cin = x.shape
     kh, kw, _, cout = w.shape
     H, W = Hp - kh + 1, Wp - kw + 1
-    kern = functools.partial(_conv_kernel, kh=kh, kw=kw,
-                             apply_sigmoid=apply_sigmoid)
+    kern = functools.partial(_conv_kernel, kh=kh, kw=kw, activation=activation)
     return pl.pallas_call(
         kern,
         grid=(B,),

@@ -1,8 +1,15 @@
 """jit'd public wrapper for the Pallas conv2d kernel.
 
 Handles SAME padding (Keras even-kernel convention: 0 before, 1 after),
-stride (via output decimation for the small strides this model family uses),
-and the VMEM-budget check for the whole-image blocking strategy.
+stride, the fused activation epilogue, and the VMEM-budget check for the
+whole-image blocking strategy.
+
+Stride limitation (documented): the kernel always computes the FULL stride-1
+output and decimates it afterwards (`y[:, ::stride, ::stride]`).  That is
+exact, and cheap for this model family's small strides, but the work (and
+the VMEM) for the discarded rows/columns is still spent — so the VMEM
+budget check accounts for the PRE-decimation output block, not the smaller
+strided result.  A natively-strided kernel is future work (see ROADMAP).
 """
 from __future__ import annotations
 
@@ -17,11 +24,17 @@ _VMEM_BUDGET = 14 * 2 ** 20  # leave headroom out of ~16 MB/core
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "apply_sigmoid", "interpret"))
+                                             "apply_sigmoid", "activation",
+                                             "interpret"))
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
            stride: int = 1, padding: str = "SAME",
-           apply_sigmoid: bool = False, interpret: bool = True) -> jnp.ndarray:
-    """NHWC x HWIO -> NHWC, f32. Pallas windowing+MAC kernel."""
+           apply_sigmoid: bool = False, activation: str | None = None,
+           interpret: bool = True) -> jnp.ndarray:
+    """NHWC x HWIO -> NHWC, f32. Pallas windowing+MAC kernel.
+
+    `activation` in {None, "sigmoid", "plan"} fuses the activation unit into
+    the kernel epilogue (`apply_sigmoid=True` is legacy for "sigmoid").
+    """
     kh, kw, cin, cout = w.shape
     if b is None:
         b = jnp.zeros((cout,), jnp.float32)
@@ -30,12 +43,18 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
     elif padding != "VALID":
         raise ValueError(padding)
     B, Hp, Wp, _ = x.shape
-    vmem = (Hp * Wp * cin + (Hp - kh + 1) * (Wp - kw + 1) * cout) * 4
+    # Pre-decimation output block: the kernel materializes the full stride-1
+    # result in VMEM even when stride > 1 (see module docstring), so that is
+    # what must fit alongside the padded input block.
+    H1, W1 = Hp - kh + 1, Wp - kw + 1
+    vmem = (Hp * Wp * cin + H1 * W1 * cout) * 4
     if vmem > _VMEM_BUDGET:
-        raise ValueError(f"image block exceeds VMEM budget: {vmem} B")
+        raise ValueError(
+            f"image block exceeds VMEM budget: {vmem} B "
+            f"(input {Hp}x{Wp}x{cin} + pre-decimation output {H1}x{W1}x{cout})")
     y = conv2d_pallas(x.astype(jnp.float32), w.astype(jnp.float32),
                       b.astype(jnp.float32), apply_sigmoid=apply_sigmoid,
-                      interpret=interpret)
+                      activation=activation, interpret=interpret)
     if stride > 1:
-        y = y[:, ::stride, ::stride, :]
+        y = y[:, ::stride, ::stride, :]          # output decimation
     return y

@@ -4,10 +4,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.fixed_point import sigmoid_plan_f32
+
 
 def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
                stride: int = 1, padding: str = "SAME",
-               apply_sigmoid: bool = False) -> jnp.ndarray:
+               apply_sigmoid: bool = False,
+               activation: str | None = None) -> jnp.ndarray:
+    if activation is None and apply_sigmoid:
+        activation = "sigmoid"
     kh, kw, _, cout = w.shape
     if b is None:
         b = jnp.zeros((cout,), jnp.float32)
@@ -16,8 +21,10 @@ def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
         x.astype(jnp.float32), w.astype(jnp.float32), window_strides=(1, 1),
         padding=pad, dimension_numbers=("NHWC", "HWIO", "NHWC"))
     y = y + b.astype(jnp.float32)
-    if apply_sigmoid:
+    if activation == "sigmoid":
         y = jax.nn.sigmoid(y)
+    elif activation == "plan":
+        y = sigmoid_plan_f32(y)
     if stride > 1:
         y = y[:, ::stride, ::stride, :]
     return y

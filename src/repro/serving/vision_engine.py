@@ -1,0 +1,170 @@
+"""Streaming vision serving engine: async single-image requests, batched steps.
+
+The TPU analogue of the paper's deployment loop — there, pixels stream from
+the PS over a DMA-FIFO into the fabric and classifications stream back; here,
+single-image classification requests stream into a queue, the engine
+coalesces them into FIXED-SIZE padded batches (one compiled program, no
+recompilation churn — the FIFO depth is the batch size), runs one jitted
+step of `smallnet.apply` on any registered backend, and streams per-request
+results back with latency accounting.
+
+Sibling of `serving/engine.py` (the LM continuous-batching engine); this one
+is the image-classification half of the serving story.
+
+Usage:
+
+    eng = VisionEngine(params, backend="pallas", batch_size=32)
+    uids = [eng.submit(img) for img in images]       # async: queue only
+    eng.run()                                        # drain in batched steps
+    res = eng.results()                              # uid -> VisionResult
+    print(eng.stats())                               # latency + throughput
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backends as B
+from repro.core import smallnet
+
+
+@dataclasses.dataclass
+class VisionRequest:
+    uid: int
+    image: np.ndarray                 # (28, 28, 1) float32
+    t_submit: float = 0.0
+
+
+@dataclasses.dataclass
+class VisionResult:
+    uid: int
+    pred: int                         # Max Finder output
+    scores: np.ndarray                # (10,) backend-native class scores
+    t_submit: float
+    t_done: float
+    batch_index: int                  # which engine step served it
+
+    @property
+    def latency_s(self) -> float:
+        """Queue wait + batch compute (what the client observes)."""
+        return self.t_done - self.t_submit
+
+
+class VisionEngine:
+    """Batched streaming classifier over any registered smallNet backend.
+
+    Requests submitted via `submit()` queue up; each `step()` pops up to
+    `batch_size` of them, zero-pads to exactly `batch_size` (static shape ->
+    a single XLA executable per engine), runs the jitted forward, and
+    timestamps completions after `block_until_ready` so reported latency is
+    honest wall clock.
+    """
+
+    def __init__(self, params: Any, *, backend: str | B.Backend = "ref",
+                 batch_size: int = 32, image_shape=(28, 28, 1),
+                 warmup: bool = True):
+        self.backend = B.get_backend(backend)
+        self.batch_size = int(batch_size)
+        self.image_shape = tuple(image_shape)
+        # quantize once at engine build (the paper bakes weights at synthesis)
+        self.params = self.backend.prepare_params(params)
+        be = self.backend
+        self._step_fn = jax.jit(lambda p, x: smallnet.apply(p, x, backend=be))
+        self._queue: collections.deque[VisionRequest] = collections.deque()
+        self._results: dict[int, VisionResult] = {}
+        self._next_uid = 0
+        self._batches_run = 0
+        self._padded_slots = 0
+        self._t_first_submit: float | None = None
+        self._t_last_done: float | None = None
+        if warmup:                    # compile outside the serving clock
+            zeros = jnp.zeros((self.batch_size,) + self.image_shape, jnp.float32)
+            self._step_fn(self.params, zeros).block_until_ready()
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, image: np.ndarray) -> int:
+        """Queue one image; returns its uid immediately (async)."""
+        img = np.asarray(image, np.float32).reshape(self.image_shape)
+        uid = self._next_uid
+        self._next_uid += 1
+        now = time.perf_counter()
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+        self._queue.append(VisionRequest(uid=uid, image=img, t_submit=now))
+        return uid
+
+    def submit_many(self, images: Iterable[np.ndarray]) -> list[int]:
+        return [self.submit(img) for img in images]
+
+    # -- serving side -------------------------------------------------------
+
+    def step(self) -> int:
+        """Serve one batch: coalesce up to batch_size queued requests, pad,
+        run the jitted step, record results. Returns #requests served."""
+        if not self._queue:
+            return 0
+        reqs = [self._queue.popleft()
+                for _ in range(min(self.batch_size, len(self._queue)))]
+        batch = np.zeros((self.batch_size,) + self.image_shape, np.float32)
+        for i, r in enumerate(reqs):
+            batch[i] = r.image
+        scores = self._step_fn(self.params, jnp.asarray(batch))
+        scores.block_until_ready()
+        t_done = time.perf_counter()
+        self._t_last_done = t_done
+        preds = np.asarray(smallnet.predict(scores))
+        scores_np = np.asarray(scores)
+        for i, r in enumerate(reqs):
+            self._results[r.uid] = VisionResult(
+                uid=r.uid, pred=int(preds[i]), scores=scores_np[i],
+                t_submit=r.t_submit, t_done=t_done,
+                batch_index=self._batches_run)
+        self._batches_run += 1
+        self._padded_slots += self.batch_size - len(reqs)
+        return len(reqs)
+
+    def run(self) -> int:
+        """Drain the queue; returns total #requests served."""
+        served = 0
+        while self._queue:
+            served += self.step()
+        return served
+
+    def serve(self, images: Iterable[np.ndarray]) -> list[VisionResult]:
+        """Convenience: submit a workload, drain it, return results in
+        submission order."""
+        uids = self.submit_many(images)
+        self.run()
+        return [self._results[u] for u in uids]
+
+    # -- reporting ----------------------------------------------------------
+
+    def results(self) -> dict[int, VisionResult]:
+        return dict(self._results)
+
+    def stats(self) -> dict:
+        """Per-request latency distribution + engine throughput."""
+        res = list(self._results.values())
+        if not res:
+            return {"backend": self.backend.name, "n": 0}
+        lat = np.array([r.latency_s for r in res])
+        wall = (self._t_last_done or 0.0) - (self._t_first_submit or 0.0)
+        return {
+            "backend": self.backend.name,
+            "n": len(res),
+            "batch_size": self.batch_size,
+            "batches": self._batches_run,
+            "padded_slots": self._padded_slots,
+            "latency_mean_ms": float(lat.mean() * 1e3),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "latency_max_ms": float(lat.max() * 1e3),
+            "throughput_qps": float(len(res) / wall) if wall > 0 else float("inf"),
+        }

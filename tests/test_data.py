@@ -1,6 +1,9 @@
 """Deterministic host-sharded data pipeline (straggler/fault substrate)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import numpy as np
 
 from repro.data import lm_data, synth_mnist

@@ -81,3 +81,45 @@ def test_conv2d_vmem_guard():
     w = jnp.zeros((3, 3, 8, 8), jnp.float32)
     with pytest.raises(ValueError, match="VMEM"):
         conv2d(x, w)
+
+
+@pytest.mark.parametrize("activation", [None, "sigmoid", "plan"])
+def test_conv2d_fused_activation_epilogue(activation, rng):
+    # smallNet conv1 shape with each fused epilogue vs the composed oracle
+    x = jnp.asarray(rng.normal(size=(2, 28, 28, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 1, 1)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1,)), jnp.float32)
+    got = conv2d(x, w, b, activation=activation)
+    want = conv2d_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_conv2d_bad_activation_rejected():
+    x = jnp.zeros((1, 8, 8, 1), jnp.float32)
+    w = jnp.zeros((2, 2, 1, 1), jnp.float32)
+    with pytest.raises(ValueError, match="activation"):
+        conv2d(x, w, activation="relu")
+
+
+def test_conv2d_stride2_vmem_budgets_pre_decimation_output():
+    """Strides are realized by output decimation AFTER a full stride-1 conv
+    (documented limitation): the VMEM check must therefore reject shapes
+    whose PRE-decimation output exceeds the budget, even when the strided
+    result would fit comfortably."""
+    x = jnp.zeros((1, 512, 512, 1), jnp.float32)
+    w = jnp.zeros((2, 2, 1, 16), jnp.float32)
+    # pre-decimation output 512*512*16*4 B ~= 16.8 MB > 14 MB budget;
+    # the stride-2 result would only be ~4.2 MB
+    with pytest.raises(ValueError, match="pre-decimation"):
+        conv2d(x, w, stride=2)
+
+
+def test_conv2d_stride2_small_shape_still_exact(rng):
+    x = jnp.asarray(rng.normal(size=(2, 12, 10, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 3, 4)), jnp.float32)
+    got = conv2d(x, w, stride=2)
+    want = conv2d_ref(x, w, stride=2)
+    assert got.shape == (2, 6, 5, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

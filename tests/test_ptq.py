@@ -1,10 +1,12 @@
 """Post-training quantization properties (the paper's train->bake flow)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import ptq
 

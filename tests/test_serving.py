@@ -69,3 +69,72 @@ def test_int8_quanttensor_serving_direct(setup, rng):
     done = Engine(cfg, qp, batch_size=2, max_len=32).submit_and_run(reqs)
     assert all(r.done and len(r.out) == 3 for r in done)
     assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+
+
+# ---------------------------------------------------------------------------
+# Vision engine: streaming single-image requests over batched backend steps
+# ---------------------------------------------------------------------------
+
+from repro.core import smallnet
+from repro.serving.vision_engine import VisionEngine
+
+
+@pytest.fixture(scope="module")
+def vision_setup(rng):
+    params = smallnet.init_params(jax.random.key(0))
+    images = rng.uniform(0.0, 1.0, (104, 28, 28, 1)).astype(np.float32)
+    return params, images
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_vision_engine_serves_100_requests(vision_setup, backend):
+    """Acceptance: >= 100 queued single-image requests drain through batched
+    jitted steps with per-request latency reported, for two backends."""
+    params, images = vision_setup
+    eng = VisionEngine(params, backend=backend, batch_size=32)
+    res = eng.serve(list(images))
+    assert len(res) == 104
+    assert [r.uid for r in res] == list(range(104))
+    assert all(r.latency_s > 0 for r in res)
+    stats = eng.stats()
+    assert stats["n"] == 104
+    assert stats["batches"] == 4                      # ceil(104/32) batched steps
+    assert stats["padded_slots"] == 4 * 32 - 104
+    assert stats["latency_p95_ms"] >= stats["latency_p50_ms"] > 0
+    assert stats["throughput_qps"] > 0
+
+
+def test_vision_engine_matches_direct_apply(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=16)
+    res = eng.serve(list(images[:20]))
+    direct = smallnet.predict(smallnet.apply(params, jnp.asarray(images[:20]),
+                                             backend="ref"))
+    assert [r.pred for r in res] == [int(t) for t in direct]
+    np.testing.assert_allclose(np.stack([r.scores for r in res]),
+                               np.asarray(smallnet.apply(
+                                   params, jnp.asarray(images[:20]))),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_vision_engine_async_submit_then_step(vision_setup):
+    """submit() queues without running; step() serves at most one batch."""
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=8)
+    uids = [eng.submit(img) for img in images[:11]]
+    assert eng.results() == {}                         # nothing served yet
+    assert eng.step() == 8                             # first coalesced batch
+    assert set(eng.results()) == set(uids[:8])
+    assert eng.step() == 3                             # padded remainder batch
+    assert eng.step() == 0                             # queue drained
+    assert set(eng.results()) == set(uids)
+
+
+def test_vision_engine_fixed_backend_int_scores(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="fixed", batch_size=8)
+    res = eng.serve(list(images[:10]))
+    assert all(r.scores.dtype == np.int32 for r in res)
+    want = smallnet.predict(smallnet.apply(params, jnp.asarray(images[:10]),
+                                           backend="fixed"))
+    assert [r.pred for r in res] == [int(t) for t in want]

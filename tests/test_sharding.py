@@ -8,9 +8,11 @@ import subprocess
 import sys
 import textwrap
 
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.distributed import sharding as shd

@@ -28,11 +28,13 @@ def test_forward_shapes():
     assert smallnet.predict(scores).shape == (5,)
 
 
+@pytest.mark.slow
 def test_training_reaches_deployable_accuracy(trained):
     # paper hardware threshold: 81 %; our MNIST-proxy target: comfortably above
     assert trained.test_acc >= 0.80, trained.test_acc
 
 
+@pytest.mark.slow
 def test_accuracy_ladder(trained):
     accs = deploy.evaluate_all_paths(trained.params, n_test=800)
     # fixed-point and int8 paths must stay within a few points of float —
@@ -42,6 +44,7 @@ def test_accuracy_ladder(trained):
     assert accs["float32_plan_sigmoid"] >= accs["float32"] - 0.04
 
 
+@pytest.mark.slow
 def test_fixed_path_is_integer_only(trained):
     qp = smallnet.quantize_params_fixed(trained.params)
     for leaf in jax.tree_util.tree_leaves(qp):
@@ -51,6 +54,7 @@ def test_fixed_path_is_integer_only(trained):
     assert out.dtype == jnp.int32
 
 
+@pytest.mark.slow
 def test_bake_constant_folds(trained):
     baked = deploy.bake(smallnet.forward, trained.params)
     x, _ = synth_mnist.make_dataset(4, seed=3)

@@ -17,6 +17,7 @@ from repro.runtime import fault
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end():
     """train -> extract -> fixed-point bake -> classify: the full smallNet
     deployment flow of the paper, in one go."""
@@ -34,6 +35,7 @@ def test_paper_pipeline_end_to_end():
     assert lat < 1.0                            # sanity: sub-second inference
 
 
+@pytest.mark.slow
 def test_lm_training_loss_decreases():
     cfg = get_config("granite-3-2b").smoke()
     t = Trainer(cfg, TrainerConfig(total_steps=150, seq_len=64, global_batch=8,
