@@ -59,6 +59,19 @@ def run(trained):
     rows.append(("latency/deployed_int8", (time.perf_counter() - t0) / 100 * 1e6,
                  "per image"))
 
+    # bit-faithful deployed path: Qm.n weights baked into the fused
+    # fixed-point Pallas pipeline (the closest analogue of the paper's
+    # 109 ms fabric number — same words the Verilog datapath would produce)
+    qfix = smallnet.quantize_params_fixed(params)
+    bakedfx = deploy.bake(
+        lambda q, xx: smallnet.apply(q, xx, backend="fixed_pallas"), qfix)
+    bakedfx(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(100):
+        bakedfx(x).block_until_ready()
+    rows.append(("latency/deployed_fixed_pallas",
+                 (time.perf_counter() - t0) / 100 * 1e6, "per image"))
+
     # backend sweep through the streaming vision engine: every registered
     # substrate serves the same 128-request single-image workload in batched
     # jitted steps (the serving-path numbers, queue wait included)

@@ -10,9 +10,11 @@
   roofline_table  — three-term roofline per (arch x shape), single pod
 
 `--backends` runs one tiny batch through every registered inference backend
-(ref / plan / pallas / pallas_plan / fixed / int8) plus a mini vision-engine
-drain, checks parity against the reference substrate, and exits nonzero on
-failure — catches benchmark drift without a full training run.
+(ref / plan / pallas / pallas_plan / fixed / fixed_pallas / int8) plus a
+mini vision-engine drain, checks parity against the reference substrate
+(and int32 WORD EQUALITY between fixed and fixed_pallas — the fused-kernel
+bit-exactness contract), and exits nonzero on failure — catches benchmark
+drift without a full training run.
 """
 import argparse
 import sys
@@ -54,6 +56,7 @@ def backend_smoke() -> int:
         "pallas": (ref, 1e-4),          # interpret-mode float assoc. noise
         "pallas_plan": (plan, 1e-4),
         "fixed": (plan, 5e-3),          # Q16.16 quantization steps
+        "fixed_pallas": (plan, 5e-3),   # same Qm.n words as "fixed"
         "int8": (ref, 0.15),            # int8 PTQ + PLAN sigmoid
     }
     print("name,us_per_call,derived")
@@ -68,6 +71,15 @@ def backend_smoke() -> int:
         failed |= not ok
         print(f"smoke/parity_{name},,max_err={err:.2e} tol={tol:g} "
               f"{'OK' if ok else 'FAIL'}")
+    # the fused fixed kernel's contract is stronger than a tolerance: its
+    # int32 words must be IDENTICAL to the emulated fixed substrate
+    fix = smallnet.apply(params, x, backend="fixed")
+    fixp = smallnet.apply(params, x, backend="fixed_pallas")
+    n_drift = int(jnp.sum(fix != fixp))
+    ok = n_drift == 0
+    failed |= not ok
+    print(f"smoke/bitexact_fixed_pallas,,drifted_words={n_drift}/"
+          f"{fix.size} {'OK' if ok else 'FAIL'}")
     # mini engine drain: the serving path must work for every backend too
     for name in backends.list_backends():
         eng = VisionEngine(params, backend=name, batch_size=4, warmup=False)

@@ -53,6 +53,14 @@ def main():
         acc = float((smallnet.predict(scores) == jnp.asarray(yb)).mean())
         print(f"   backend={name:12s} acc={acc:.4f} argmax-agreement-vs-ref={agree:.4f}")
 
+    # the fused fixed-point Pallas pipeline is not merely close to the
+    # emulated fixed path — its int32 score words are identical
+    fix = smallnet.apply(res.params, xb, backend="fixed")
+    fixp = smallnet.apply(res.params, xb, backend="fixed_pallas")
+    n_drift = int((fix != fixp).sum())
+    print(f"   fixed vs fixed_pallas: {n_drift} of {fix.size} int32 words "
+          f"differ ({'bit-exact' if n_drift == 0 else 'DRIFT'})")
+
     print(f"== 5. streaming vision engine on backend={args.backend!r} ==")
     eng = VisionEngine(res.params, backend=args.backend, batch_size=32)
     eng.serve(list(synth_mnist.make_dataset(128, seed=6)[0]))

@@ -25,7 +25,12 @@ engines over one fixed graph):
                  maxpool2d comparator tree), exact sigmoid — matches `ref`
     pallas_plan  Pallas kernels with the fused conv+PLAN epilogue and the
                  sigmoid_pla VPU kernel — matches `plan`
-    fixed        bit-faithful Qm.n two's-complement datapath (§III-B)
+    fixed        bit-faithful Qm.n two's-complement datapath (§III-B),
+                 emulated with jnp int ops
+    fixed_pallas the same Qm.n words through the FUSED kernels/fixed_conv
+                 Pallas pipeline (windowing+limb-MAC+bias+PLAN+maxpool in
+                 one launch) + the fixed_dense MAC launch — int32 bit-exact
+                 with "fixed"
     int8         TPU-native PTQ: int8 dense MAC through the quant_matmul
                  MXU kernel, dequant-on-use convs, PLAN sigmoid
 
@@ -49,8 +54,10 @@ import jax.numpy as jnp
 from repro.core import fixed_point as fxp
 from repro.core import ptq
 from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.fixed_conv.ops import (fixed_conv2d, fixed_maxpool2x2,
+                                          fixed_sigmoid)
 from repro.kernels.maxpool2d.ops import maxpool2d
-from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ops import fixed_dense, quant_matmul
 from repro.kernels.sigmoid_pla.ops import sigmoid_pla
 
 
@@ -151,6 +158,12 @@ class Backend:
     def fused_conv_act(self, x, w, b):
         """conv + activation; backends with a fused epilogue override this."""
         return self.sigmoid(self.conv2x2_same(x, w, b))
+
+    def fused_conv_act_pool(self, x, w, b):
+        """conv + activation + 2x2 maxpool — the full paper pipeline stage.
+        Default composes the two hooks; backends whose kernel fuses the pool
+        into the same launch (fixed_pallas) override this."""
+        return self.maxpool2x2(self.fused_conv_act(x, w, b))
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -286,6 +299,53 @@ class FixedBackend(Backend):
 
 
 register_backend("fixed", FixedBackend())
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPallasBackend(FixedBackend):
+    """The bit-faithful Qm.n datapath as FUSED Pallas launches.
+
+    Same arithmetic contract as "fixed" (it reuses `FixedBackend
+    .quantize_params` and the `fixed_point` word semantics), but each
+    pipeline stage is one kernel launch from kernels/fixed_conv — and the
+    conv+PLAN+maxpool stage is a SINGLE launch via `fused_conv_act_pool`,
+    the TPU analogue of the paper's fully fused fabric pipeline.  Output
+    words are int32-identical to the emulated "fixed" backend (asserted by
+    the golden-vector and hypothesis batteries in tests/).
+    """
+    name: str = "fixed_pallas"
+    interpret: bool = True
+
+    def _w4(self, w):
+        # (2,2,1,1) int32 weight -> the 4 MAC taps, row-major like the
+        # emulated path's `w.reshape(4)`
+        return w.reshape(4)
+
+    def conv2x2_same(self, x, w, b):
+        return fixed_conv2d(x, self._w4(w), b, cfg=self.cfg,
+                            interpret=self.interpret)
+
+    def fused_conv_act(self, x, w, b):
+        return fixed_conv2d(x, self._w4(w), b, cfg=self.cfg,
+                            activation="plan", interpret=self.interpret)
+
+    def fused_conv_act_pool(self, x, w, b):
+        # windowing -> limb MAC -> bias -> PLAN -> maxpool, one launch
+        return fixed_conv2d(x, self._w4(w), b, cfg=self.cfg,
+                            activation="plan", pool=True,
+                            interpret=self.interpret)
+
+    def maxpool2x2(self, x):
+        return fixed_maxpool2x2(x, interpret=self.interpret)
+
+    def dense(self, x, w, b):
+        return fixed_dense(x, w, b, cfg=self.cfg, interpret=self.interpret)
+
+    def sigmoid(self, x):
+        return fixed_sigmoid(x, cfg=self.cfg, interpret=self.interpret)
+
+
+register_backend("fixed_pallas", FixedPallasBackend())
 
 
 # ---------------------------------------------------------------------------

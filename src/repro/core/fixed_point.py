@@ -53,6 +53,17 @@ class FixedPointConfig:
 Q16_16 = FixedPointConfig(32, 16)
 Q8_8 = FixedPointConfig(16, 8)
 
+# The canonical format x mode matrix for the bit-exactness contract: every
+# battery (golden-vector generator, kernel parity tests, hypothesis props)
+# sweeps THIS dict, so adding a new format/mode here propagates everywhere.
+STANDARD_CONFIGS = {
+    "q16_16": Q16_16,
+    "q16_16_sat": FixedPointConfig(32, 16, saturate=True),
+    "q16_16_trunc": FixedPointConfig(32, 16, round_nearest=False),
+    "q8_8": Q8_8,
+    "q8_8_sat": FixedPointConfig(16, 8, saturate=True),
+}
+
 
 def _wrap_to_bits(x: jnp.ndarray, total_bits: int) -> jnp.ndarray:
     """Truncate an int32 value to `total_bits` with sign extension (2's comp)."""
@@ -165,6 +176,22 @@ def fixed_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: FixedPointConfig = Q16_16)
     return _wrap_to_bits(jnp.sum(prods, axis=1, dtype=jnp.int32), cfg.total_bits)
 
 
+def shift_right_round(x: jnp.ndarray, k: int, round_nearest: bool) -> jnp.ndarray:
+    """Arithmetic right shift with the config's rounding rule.
+
+    The single definition of ">> with rounding" shared by the emulated path
+    and the Pallas fixed kernels: truncate mode is the pure hardware shifter
+    (`x >> k`); round-nearest adds bit (k-1) of x, exactly the rule
+    `fixed_mul` applies to its full product.  Keeping one helper guarantees
+    both substrates use the same shift semantics (this was a latent
+    divergence: the PLAN sigmoid used to truncate unconditionally while
+    `fixed_mul` honoured `round_nearest`).
+    """
+    if k == 0 or not round_nearest:
+        return x >> k
+    return (x >> k) + ((x >> (k - 1)) & 1)
+
+
 def fixed_sigmoid_plan(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.ndarray:
     """PLAN (piecewise-linear approximation) sigmoid in fixed point.
 
@@ -175,18 +202,23 @@ def fixed_sigmoid_plan(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.nd
         1 <= |x| < 2.375  -> 0.125 *|x| + 0.625
         0 <= |x| < 1      -> 0.25  *|x| + 0.5
     and sigmoid(-x) = 1 - sigmoid(x).
+
+    The power-of-two slope multiplies are realized by `shift_right_round`,
+    so they follow `cfg.round_nearest` just like `fixed_mul` (truncate mode
+    is the pure shifter the PLAN hardware uses).
     """
     f = cfg.frac_bits
     ax = jnp.abs(x)
     c5 = to_fixed(5.0, cfg)
     c2375 = to_fixed(2.375, cfg)
     c1 = to_fixed(1.0, cfg)
+    rn = cfg.round_nearest
     y = jnp.where(
         ax >= c5, to_fixed(1.0, cfg) if cfg.int_bits >= 1 else cfg.max_int,
         jnp.where(
-            ax >= c2375, (ax >> 5) + to_fixed(0.84375, cfg),
-            jnp.where(ax >= c1, (ax >> 3) + to_fixed(0.625, cfg),
-                      (ax >> 2) + to_fixed(0.5, cfg))))
+            ax >= c2375, shift_right_round(ax, 5, rn) + to_fixed(0.84375, cfg),
+            jnp.where(ax >= c1, shift_right_round(ax, 3, rn) + to_fixed(0.625, cfg),
+                      shift_right_round(ax, 2, rn) + to_fixed(0.5, cfg))))
     one = to_fixed(1.0, cfg) if cfg.int_bits >= 1 else cfg.max_int
     return jnp.where(x < 0, one - y, y).astype(jnp.int32)
 

@@ -16,8 +16,9 @@ backend (core/backends.py) supplies the layer primitives.  Registered
 backends: "ref" (float32, the Keras counterpart), "plan" (float32 + PLAN
 hardware sigmoid), "pallas" / "pallas_plan" (the Pallas TPU kernels with
 fused conv epilogues), "fixed" (bit-faithful Qm.n two's-complement — exactly
-the paper's Verilog datapath, §III-B Fig. 4), "int8" (TPU-native PTQ with
-the quant_matmul MXU kernel).
+the paper's Verilog datapath, §III-B Fig. 4), "fixed_pallas" (the same Qm.n
+words as ONE fused Pallas launch per pipeline stage, int32 bit-exact with
+"fixed"), "int8" (TPU-native PTQ with the quant_matmul MXU kernel).
 
 `forward` / `forward_plan` / `forward_fixed` / `forward_int8` remain as thin
 wrappers over `apply` for existing callers.
@@ -58,10 +59,12 @@ def apply(params: dict, images: jnp.ndarray, *,
     be = B.get_backend(backend)
     p = be.prepare_params(params)
     x = be.ingest(images)
-    x = be.fused_conv_act(x, p["conv1"]["w"], p["conv1"]["b"])
-    x = be.maxpool2x2(x)
-    x = be.fused_conv_act(x, p["conv2"]["w"], p["conv2"]["b"])
-    x = be.maxpool2x2(x)
+    # conv+act+pool goes through one hook so backends with a fully fused
+    # stage (fixed_pallas: windowing+MAC+bias+PLAN+maxpool in ONE Pallas
+    # launch) keep the paper's pipeline structure; the default composes
+    # fused_conv_act and maxpool2x2 exactly as before.
+    x = be.fused_conv_act_pool(x, p["conv1"]["w"], p["conv1"]["b"])
+    x = be.fused_conv_act_pool(x, p["conv2"]["w"], p["conv2"]["b"])
     x = be.flatten(x)                                    # (B, 49)
     return be.sigmoid(be.dense(x, p["dense"]["w"], p["dense"]["b"]))
 

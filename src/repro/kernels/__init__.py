@@ -1,12 +1,18 @@
 # Custom Pallas kernels for the paper's compute hot-spots (conv datapath,
-# comparator-tree pool, PLAN sigmoid, int8 MAC array).  Each package pairs a
-# kernel with a jit'd ops wrapper and a pure-jnp oracle; the backend
-# dispatch layer (core/backends.py) wires the wrappers into the model.
+# comparator-tree pool, PLAN sigmoid, int8 MAC array, and the fused Qm.n
+# fixed-point pipeline).  Each package pairs a kernel with a jit'd ops
+# wrapper and an oracle (pure-jnp, or numpy int64 for the fixed path); the
+# backend dispatch layer (core/backends.py) wires the wrappers into the model.
 from repro.kernels.conv2d.ops import conv2d
 from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.fixed_conv.ops import (fixed_conv2d, fixed_maxpool2x2,
+                                          fixed_sigmoid)
+from repro.kernels.fixed_conv.ref import (fixed_conv2d_ref, fixed_dense_ref,
+                                          fixed_maxpool2x2_ref,
+                                          fixed_sigmoid_plan_ref)
 from repro.kernels.maxpool2d.ops import maxpool2d
 from repro.kernels.maxpool2d.ref import maxpool2d_ref
-from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ops import fixed_dense, quant_matmul
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
 from repro.kernels.sigmoid_pla.ops import sigmoid_pla
 from repro.kernels.sigmoid_pla.ref import sigmoid_pla_ref

@@ -1,0 +1,5 @@
+from repro.kernels.fixed_conv.ops import (fixed_conv2d, fixed_maxpool2x2,
+                                          fixed_sigmoid)
+from repro.kernels.fixed_conv.ref import (fixed_conv2d_ref, fixed_dense_ref,
+                                          fixed_maxpool2x2_ref,
+                                          fixed_sigmoid_plan_ref)

@@ -1,0 +1,140 @@
+"""Fused Qm.n fixed-point conv pipeline as a Pallas kernel — the paper's
+Verilog datapath (§III-B, Fig. 4) as ONE kernel launch, entirely in int32.
+
+Pipeline stages, fused per program instance (one image per grid step):
+
+  windowing      -> four static shifted VMEM views of the SAME-padded block
+                    (the Verilog line buffer becomes `x[dh:dh+H, dw:dw+W]`)
+  parallel MAC   -> per-tap 32x32 fixed multiply via 16-BIT LIMB
+                    DECOMPOSITION (below), int32 wraparound accumulate —
+                    the DSP MAC array, one tap per unrolled step
+  bias add       -> `fixed_add` (wraparound, or sign-checked saturation)
+  PLAN sigmoid   -> shift-add piecewise-linear unit (optional epilogue)
+  maxpool 2x2/2  -> 3-comparator tree over strided views (optional epilogue)
+
+Why the limb decomposition: a Qm.n product needs the full 64-bit result of a
+32x32 multiply before the >> frac_bits renormalization, but the TPU (and
+JAX without x64) only has 32-bit integer lanes.  So `fixed_point
+._full_mul_shift` splits each operand into an unsigned low limb (16 bits)
+and a signed high limb and reassembles
+
+    a*b = ah*bh*2^32 + (ah*bl + al*bh)*2^16 + al*bl   (mod 2^32 after >>),
+
+where every partial product provably fits 32 bits.  The kernel body calls
+the SAME `fixed_point` helpers the emulated "fixed" backend uses, so the two
+substrates cannot drift: any future change to the arithmetic lands on both.
+
+Why interpret mode is bit-identical to compiled mode: every op in the
+pipeline is integer (shifts, masks, adds, compares, bitcasts) — there is no
+floating-point reassociation, no MXU accumulation-order freedom, nothing
+with rounding latitude.  Integer two's-complement ops have exactly one
+defined result, so the Pallas interpreter on CPU and the compiled TPU kernel
+produce the same words.  (The only float in sight is the documented f32
+magnitude *heuristic* that drives the optional saturation decision; it is
+elementwise and identically evaluated on both substrates.)
+
+Grid: (batch,) with whole spatial dims in VMEM, mirroring kernels/conv2d;
+the ops.py wrapper enforces the VMEM budget and handles padding/stride.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fixed_point as fxp
+
+_TAPS = ((0, 0), (0, 1), (1, 0), (1, 1))   # (dh, dw) per 2x2 kernel tap
+
+
+def _pool2x2(y: jnp.ndarray) -> jnp.ndarray:
+    """3-comparator tree on even-cropped (H, W); exact for int words."""
+    H, W = y.shape
+    y = y[:H - H % 2, :W - W % 2]
+    return jnp.maximum(jnp.maximum(y[::2, ::2], y[::2, 1::2]),
+                       jnp.maximum(y[1::2, ::2], y[1::2, 1::2]))
+
+
+def _fixed_conv_kernel(x_ref, w_ref, b_ref, o_ref, *,
+                       cfg: fxp.FixedPointConfig, activation: str | None,
+                       pool: bool):
+    x = x_ref[0]                                       # (H+1, W+1) int32
+    H = x.shape[0] - 1
+    W = x.shape[1] - 1
+    acc = jnp.zeros((H, W), jnp.int32)
+    for t, (dh, dw) in enumerate(_TAPS):               # unrolled MAC taps
+        win = x[dh:dh + H, dw:dw + W]                  # windowing module
+        acc = acc + fxp.fixed_mul(win, w_ref[t], cfg)  # limb MAC, int32 wrap
+    y = fxp.fixed_add(acc, b_ref[0], cfg)              # bias add
+    if activation == "plan":
+        y = fxp.fixed_sigmoid_plan(y, cfg)             # shift-add PLAN unit
+    if pool:
+        y = _pool2x2(y)                                # comparator tree
+    o_ref[...] = y[None]
+
+
+def fixed_conv2d_pallas(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray, *,
+                        cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                        activation: str | None = None, pool: bool = False,
+                        interpret: bool = True) -> jnp.ndarray:
+    """x (B, H+1, W+1) int32 pre-padded (SAME: 0 after); w4 (4,) int32 taps;
+    b (1,) int32 bias word.  Returns (B, H, W) int32, or the pooled
+    (B, H//2, W//2) when `pool` fuses the comparator-tree stage."""
+    B, Hp, Wp = x.shape
+    H, W = Hp - 1, Wp - 1
+    Ho, Wo = (H // 2, W // 2) if pool else (H, W)
+    kern = functools.partial(_fixed_conv_kernel, cfg=cfg,
+                             activation=activation, pool=pool)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo), jnp.int32),
+        interpret=interpret,
+    )(x, w4, b)
+
+
+def _fixed_pool_kernel(x_ref, o_ref):
+    o_ref[...] = _pool2x2(x_ref[0])[None]
+
+
+def fixed_maxpool2x2_pallas(x: jnp.ndarray, *,
+                            interpret: bool = True) -> jnp.ndarray:
+    """x (B, H, W) int32, H/W even (wrapper crops) -> (B, H/2, W/2)."""
+    B, H, W = x.shape
+    return pl.pallas_call(
+        _fixed_pool_kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, H, W), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, H // 2, W // 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H // 2, W // 2), jnp.int32),
+        interpret=interpret,
+    )(x)
+
+
+def _fixed_plan_kernel(x_ref, o_ref, *, cfg: fxp.FixedPointConfig):
+    o_ref[...] = fxp.fixed_sigmoid_plan(x_ref[...], cfg)
+
+
+def fixed_sigmoid_plan_pallas(x: jnp.ndarray, *,
+                              cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                              block_rows: int = 256,
+                              interpret: bool = True) -> jnp.ndarray:
+    """x (R, C) int32, R a multiple of block_rows (wrapper pads) -> int32
+    PLAN sigmoid words, the VPU shift-add activation unit."""
+    R, C = x.shape
+    return pl.pallas_call(
+        functools.partial(_fixed_plan_kernel, cfg=cfg),
+        grid=(R // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,92 @@
+"""jit'd public wrappers for the fused fixed-point Pallas pipeline.
+
+Handles SAME padding (Keras even-kernel convention: 0 before, 1 after),
+stride (output decimation, mirroring kernels/conv2d's documented
+limitation: the VMEM budget accounts for the PRE-decimation block), the
+optional fused PLAN + maxpool epilogues, and scalar/word-shape plumbing.
+
+`FixedPointConfig` is a frozen dataclass, so it rides through `jax.jit` as a
+static argument — one compiled executable per (shape, format, mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv.kernel import (fixed_conv2d_pallas,
+                                             fixed_maxpool2x2_pallas,
+                                             fixed_sigmoid_plan_pallas)
+
+_VMEM_BUDGET = 14 * 2 ** 20  # leave headroom out of ~16 MB/core
+
+_ACTIVATIONS = (None, "plan")
+
+
+def _check_vmem(Hp: int, Wp: int, H1: int, W1: int) -> None:
+    # padded input + int32 accumulator + the worst-case limb temporaries of
+    # one tap's fixed multiply (~6 extra (H,W) int32 arrays), all x4 bytes.
+    vmem = (Hp * Wp + 7 * H1 * W1) * 4
+    if vmem > _VMEM_BUDGET:
+        raise ValueError(
+            f"image block exceeds VMEM budget: {vmem} B "
+            f"(input {Hp}x{Wp} + pre-decimation output {H1}x{W1} "
+            f"with limb temporaries)")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "activation", "pool",
+                                             "stride", "interpret"))
+def fixed_conv2d(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray, *,
+                 cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                 activation: str | None = None, pool: bool = False,
+                 stride: int = 1, interpret: bool = True) -> jnp.ndarray:
+    """Fused fixed-point 2x2 SAME conv: (B,H,W) int32 -> (B,H,W) int32.
+
+    `activation="plan"` fuses the shift-add PLAN sigmoid epilogue;
+    `pool=True` additionally fuses the 2x2/2 comparator-tree maxpool
+    (output (B, H//2, W//2)); `stride>1` decimates the full stride-1 output
+    (mutually exclusive with `pool`).  Bit-exact with the emulated "fixed"
+    backend (`backends.conv_fixed` et al.) in every format/mode.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if pool and stride > 1:
+        raise ValueError("pool and stride>1 cannot be combined")
+    B, H, W = x.shape
+    _check_vmem(H + 1, W + 1, H, W)
+    xp = jnp.pad(x.astype(jnp.int32), ((0, 0), (0, 1), (0, 1)))  # SAME 0-after
+    y = fixed_conv2d_pallas(xp, w4.reshape(4).astype(jnp.int32),
+                            b.reshape(1).astype(jnp.int32), cfg=cfg,
+                            activation=activation, pool=pool,
+                            interpret=interpret)
+    if stride > 1:
+        y = y[:, ::stride, ::stride]                  # output decimation
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fixed_maxpool2x2(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """(B, H, W) int32 -> (B, H//2, W//2), VALID 2x2/2 comparator tree."""
+    B, H, W = x.shape
+    He, We = H - H % 2, W - W % 2
+    return fixed_maxpool2x2_pallas(x[:, :He, :We].astype(jnp.int32),
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fixed_sigmoid(x: jnp.ndarray, *,
+                  cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Standalone PLAN sigmoid launch over any-shaped int32 words."""
+    shape = x.shape
+    C = shape[-1] if len(shape) > 1 else 1
+    x2 = x.astype(jnp.int32).reshape(-1, C)
+    R = x2.shape[0]
+    block = min(256, R)
+    Rp = (R + block - 1) // block * block
+    y = fixed_sigmoid_plan_pallas(jnp.pad(x2, ((0, Rp - R), (0, 0))),
+                                  cfg=cfg, block_rows=block,
+                                  interpret=interpret)
+    return y[:R].reshape(shape)

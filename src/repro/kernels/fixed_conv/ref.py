@@ -1,0 +1,172 @@
+"""Numpy int64 oracle for the fixed-point conv pipeline.
+
+Every function here mirrors, word for word, the emulated Qm.n semantics in
+`core/fixed_point.py` / `core/backends.py` — but computed in plain numpy
+int64 where the full 62-bit products exist without limb tricks.  The Pallas
+kernels and the emulated jnp path are both tested against THIS module, so a
+bug in the limb decomposition cannot hide behind a matching bug in the
+reference.
+
+Semantics pinned here (the contract of the fixed datapath):
+
+  * products: exact int64 `a*b`, arithmetic shift by frac_bits; round-nearest
+    adds bit (frac_bits-1) of the full product; result wrapped to total_bits
+    (two's complement).
+  * saturating mul: the saturation DECISION is the float32 magnitude
+    heuristic from `fixed_point.fixed_mul` (f32(a)*f32(b)/scale compared
+    against f32(max_int)/f32(min_int)), reproduced here with explicit
+    float32 casts so the boundary behaviour matches bit-for-bit.
+  * adds: int32 wraparound; saturating add checks operand/result signs in
+    the 32-bit domain BEFORE the final wrap to total_bits (exactly what
+    `fixed_add` does — for sub-32-bit formats this means the int32 add never
+    overflows and the word simply wraps at total_bits).
+  * MAC accumulate: per-product wrap to total_bits, then int32 (mod 2^32)
+    accumulation, with the final wrap to total_bits applied after the bias
+    add — the order `conv_fixed` / `fixed_matmul` use.
+  * PLAN sigmoid: shift-add only; the slope shifts follow round_nearest via
+    the same "add bit (k-1)" rule as the products.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fixed_point import FixedPointConfig, Q16_16
+
+
+def random_words(rng, shape, cfg: FixedPointConfig, extremes: int = 6) -> np.ndarray:
+    """Random valid Qm.n words with max_int/min_int injected so wraparound
+    (and the saturation decision) is exercised, not just smooth-range
+    values.  Shared by the golden-vector generator and the parity tests."""
+    x = rng.integers(cfg.min_int, cfg.max_int + 1, shape).astype(np.int64)
+    flat = x.reshape(-1)
+    idx = rng.choice(flat.size, size=min(extremes, flat.size), replace=False)
+    for j, i in enumerate(idx):
+        flat[i] = cfg.max_int if j % 2 == 0 else cfg.min_int
+    return flat.reshape(shape)
+
+
+def wrap_bits_ref(x: np.ndarray, total_bits: int) -> np.ndarray:
+    """Two's-complement wrap of int64 values to `total_bits` (sign-extended)."""
+    m = np.int64(1) << total_bits
+    half = m >> 1
+    return ((x.astype(np.int64) + half) % m - half).astype(np.int64)
+
+
+def _shift_round_ref(x: np.ndarray, k: int, round_nearest: bool) -> np.ndarray:
+    x = x.astype(np.int64)
+    if k == 0 or not round_nearest:
+        return x >> k
+    return (x >> k) + ((x >> (k - 1)) & 1)
+
+
+def to_fixed_ref(x, cfg: FixedPointConfig = Q16_16) -> np.ndarray:
+    scaled = np.round(np.asarray(x, np.float32) * np.float32(cfg.scale))
+    scaled = np.clip(scaled, np.float32(cfg.min_int), np.float32(cfg.max_int))
+    return wrap_bits_ref(scaled.astype(np.int64), cfg.total_bits)
+
+
+def fixed_mul_ref(a: np.ndarray, b: np.ndarray,
+                  cfg: FixedPointConfig = Q16_16) -> np.ndarray:
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    full = a * b                                     # exact: |full| < 2^62
+    p = _shift_round_ref(full, cfg.frac_bits, cfg.round_nearest)
+    p = wrap_bits_ref(p, 32)                         # the int32 word
+    if cfg.saturate:
+        # float32 magnitude heuristic, float32 thresholds (matches jnp's
+        # weak-typed comparison where max_int rounds to 2^31 in f32)
+        approx = (a.astype(np.float32) * b.astype(np.float32)
+                  / np.float32(cfg.scale))
+        p = np.where(approx > np.float32(cfg.max_int), cfg.max_int,
+                     np.where(approx < np.float32(cfg.min_int), cfg.min_int,
+                              p)).astype(np.int64)
+    return wrap_bits_ref(p, cfg.total_bits)
+
+
+def fixed_add_ref(a: np.ndarray, b: np.ndarray,
+                  cfg: FixedPointConfig = Q16_16) -> np.ndarray:
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    s = wrap_bits_ref(a + b, 32)                     # int32 wraparound add
+    if cfg.saturate:
+        ovf = (np.sign(a) == np.sign(b)) & (np.sign(s) != np.sign(a)) & (a != 0)
+        sat = np.where(a > 0, cfg.max_int, cfg.min_int).astype(np.int64)
+        s = np.where(ovf, sat, s)
+    return wrap_bits_ref(s, cfg.total_bits)
+
+
+def windows_2x2_same_ref(x: np.ndarray) -> np.ndarray:
+    """(B,H,W) -> (B,H,W,4) of 2x2 SAME patches (0 before, 1 after pad)."""
+    xp = np.pad(np.asarray(x, np.int64), ((0, 0), (0, 1), (0, 1)))
+    return np.stack([xp[:, :-1, :-1], xp[:, :-1, 1:],
+                     xp[:, 1:, :-1], xp[:, 1:, 1:]], axis=-1)
+
+
+def fixed_sigmoid_plan_ref(x: np.ndarray,
+                           cfg: FixedPointConfig = Q16_16) -> np.ndarray:
+    x = np.asarray(x, np.int64)
+    # jnp.abs on int32 wraps at INT32_MIN (|-2^31| stays -2^31); mirror it
+    ax = wrap_bits_ref(np.abs(x), 32)
+    rn = cfg.round_nearest
+    one = int(to_fixed_ref(1.0, cfg)) if cfg.int_bits >= 1 else cfg.max_int
+    y = np.where(
+        ax >= int(to_fixed_ref(5.0, cfg)), one,
+        np.where(
+            ax >= int(to_fixed_ref(2.375, cfg)),
+            _shift_round_ref(ax, 5, rn) + int(to_fixed_ref(0.84375, cfg)),
+            np.where(
+                ax >= int(to_fixed_ref(1.0, cfg)),
+                _shift_round_ref(ax, 3, rn) + int(to_fixed_ref(0.625, cfg)),
+                _shift_round_ref(ax, 2, rn) + int(to_fixed_ref(0.5, cfg)))))
+    # the emulated path computes `one - y` in int32; wrap to match
+    return wrap_bits_ref(np.where(x < 0, one - y, y), 32)
+
+
+def fixed_maxpool2x2_ref(x: np.ndarray) -> np.ndarray:
+    """(B,H,W) int -> (B,H//2,W//2): comparator tree (odd trailing row/col
+    cropped, VALID semantics)."""
+    x = np.asarray(x, np.int64)
+    B, H, W = x.shape
+    x = x[:, :H - H % 2, :W - W % 2]
+    return np.maximum(np.maximum(x[:, ::2, ::2], x[:, ::2, 1::2]),
+                      np.maximum(x[:, 1::2, ::2], x[:, 1::2, 1::2]))
+
+
+def fixed_conv2d_ref(x: np.ndarray, w4: np.ndarray, b,
+                     cfg: FixedPointConfig = Q16_16, *,
+                     activation: str | None = None, pool: bool = False,
+                     stride: int = 1) -> np.ndarray:
+    """The full pipeline oracle: windowing -> MAC -> bias -> [PLAN] -> [pool].
+
+    x (B,H,W) int words; w4 (4,) taps; b scalar bias word.  Matches the
+    emulated `backends.conv_fixed` + `fixed_sigmoid_plan` + `maxpool_fixed`
+    composition word-for-word.
+    """
+    if pool and stride > 1:
+        raise ValueError("pool and stride>1 cannot be combined")
+    win = windows_2x2_same_ref(x)                    # (B,H,W,4)
+    prods = np.stack(
+        [fixed_mul_ref(win[..., t], np.int64(w4[t]), cfg) for t in range(4)],
+        axis=-1)
+    acc = wrap_bits_ref(prods.sum(axis=-1), 32)      # int32 MAC accumulate
+    y = fixed_add_ref(acc, np.int64(b), cfg)
+    if activation == "plan":
+        y = fixed_sigmoid_plan_ref(y, cfg)
+    elif activation is not None:
+        raise ValueError(activation)
+    if stride > 1:
+        y = y[:, ::stride, ::stride]
+    if pool:
+        y = fixed_maxpool2x2_ref(y)
+    return y
+
+
+def fixed_dense_ref(x: np.ndarray, w: np.ndarray, b: np.ndarray,
+                    cfg: FixedPointConfig = Q16_16) -> np.ndarray:
+    """(B,K) @ (K,N) + b, fixed-point MAC array semantics (per-product wrap
+    to total_bits, int32 accumulate, wrap, bias add)."""
+    x = np.asarray(x, np.int64)
+    w = np.asarray(w, np.int64)
+    prods = fixed_mul_ref(x[:, :, None], w[None, :, :], cfg)   # (B,K,N)
+    acc = wrap_bits_ref(wrap_bits_ref(prods.sum(axis=1), 32), cfg.total_bits)
+    return fixed_add_ref(acc, np.asarray(b, np.int64).reshape(1, -1), cfg)

@@ -1,2 +1,2 @@
-from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ops import fixed_dense, quant_matmul
 from repro.kernels.quant_matmul.ref import quant_matmul_ref

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import fixed_point as fxp
+
 
 def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == 0)
@@ -61,3 +63,42 @@ def quant_matmul_pallas(xq: jnp.ndarray, wq: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(xq, wq, sx, sw)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point (Qm.n) dense MAC — the int32 sibling of the int8 kernel above
+# ---------------------------------------------------------------------------
+
+def _fixed_mm_kernel(x_ref, w_ref, b_ref, o_ref, *, cfg: fxp.FixedPointConfig):
+    """One batch block: the Qm.n MAC array + bias add, inside the launch.
+
+    This CANNOT use `jnp.dot`: the Qm.n MAC renormalizes (>> frac_bits,
+    wrap) EVERY product before accumulating, exactly like the paper's DSP
+    array — so the kernel body calls the SAME `fixed_matmul`/`fixed_add`
+    the emulated "fixed" backend uses (bit-exactness by construction).
+    Every op is integer -> interpret mode is bit-identical to compiled.
+    """
+    y = fxp.fixed_matmul(x_ref[...], w_ref[...], cfg)          # (bm, N)
+    o_ref[...] = fxp.fixed_add(y, b_ref[...].reshape(1, -1), cfg)
+
+
+def fixed_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                        cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                        bm: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x (M,K) int32 Qm.n, w (K,N) int32, b (N,) int32 -> (M,N) int32.
+    M must be a multiple of bm (the ops.py wrapper pads); K and N stay whole
+    so the per-row MAC sweep lives in one program instance."""
+    M, K = x.shape
+    _, N = w.shape
+    return pl.pallas_call(
+        functools.partial(_fixed_mm_kernel, cfg=cfg),
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, N), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(x, w, b)

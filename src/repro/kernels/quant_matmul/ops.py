@@ -1,4 +1,9 @@
-"""jit'd wrapper: pads to MXU-aligned tiles, picks block sizes, slices back."""
+"""jit'd wrappers: pad to aligned tiles, pick block sizes, slice back.
+
+`quant_matmul` is the int8 PTQ dense MAC; `fixed_dense` is its Qm.n int32
+sibling — the smallNet dense layer as a single fixed-point Pallas launch,
+bit-exact with the emulated `fixed_point.fixed_matmul` + `fixed_add` path.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,7 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.core import fixed_point as fxp
+from repro.kernels.quant_matmul.kernel import (fixed_matmul_pallas,
+                                               quant_matmul_pallas)
+
+_FIXED_VMEM_BUDGET = 14 * 2 ** 20
 
 
 def _round_up(x: int, m: int) -> int:
@@ -39,3 +48,31 @@ def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
     y = quant_matmul_pallas(xp, wp, sxp, swp, bm=bm, bn=bn, bk=bk,
                             interpret=interpret)
     return y[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fixed_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+                *, cfg: fxp.FixedPointConfig = fxp.Q16_16,
+                interpret: bool = True) -> jnp.ndarray:
+    """Fixed-point dense layer launch: (M,K) @ (K,N) + b, all int32 Qm.n.
+
+    Zero-pads the batch to the block size (a zero row is a valid fixed word
+    vector, so padded rows are just discarded work) and slices back.
+    """
+    M, K = x.shape
+    _, N = w.shape
+    if b is None:
+        b = jnp.zeros((N,), jnp.int32)
+    bm = min(128, M)
+    Mp = (M + bm - 1) // bm * bm
+    # the (bm, K, N) per-product intermediate plus ~6 limb temporaries
+    vmem = (bm * K * N * 7 + K * N) * 4
+    if vmem > _FIXED_VMEM_BUDGET:
+        raise ValueError(
+            f"fixed_dense block exceeds VMEM budget: {vmem} B "
+            f"(bm={bm}, K={K}, N={N} with limb temporaries)")
+    y = fixed_matmul_pallas(
+        jnp.pad(x.astype(jnp.int32), ((0, Mp - M), (0, 0))),
+        w.astype(jnp.int32), b.reshape(N).astype(jnp.int32),
+        cfg=cfg, bm=bm, interpret=interpret)
+    return y[:M]

@@ -1,0 +1,125 @@
+"""Generator for tests/golden/fixed_golden.json — run once, commit the JSON.
+
+    PYTHONPATH=src python tests/golden/gen_fixed_golden.py
+
+The frozen vectors are produced by the NUMPY INT64 ORACLE
+(`kernels/fixed_conv/ref.py`), not by the jnp implementations under test,
+and cross-checked at generation time against both the emulated "fixed"
+path and the fixed_pallas kernels — a generation run fails loudly if any
+substrate disagrees.  Inputs are deterministic (seeded) with max_int /
+min_int words injected so the frozen outputs actually pin wraparound (and
+the saturation decision), not just smooth-range arithmetic.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import zlib
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import backends as B
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv import (fixed_conv2d, fixed_conv2d_ref,
+                                      fixed_dense_ref, fixed_maxpool2x2,
+                                      fixed_maxpool2x2_ref, fixed_sigmoid,
+                                      fixed_sigmoid_plan_ref)
+from repro.kernels.fixed_conv.ref import random_words
+from repro.kernels.quant_matmul import fixed_dense
+
+CONFIGS = fxp.STANDARD_CONFIGS
+
+
+def _words(rng, shape, cfg, extremes=4):
+    # extremes=4 kept (not random_words' default) so regeneration stays
+    # byte-identical to the frozen vectors
+    return random_words(rng, shape, cfg, extremes)
+
+
+def _check(name, *arrays):
+    first = np.asarray(arrays[0], np.int64)
+    for a in arrays[1:]:
+        if not np.array_equal(first, np.asarray(a, np.int64)):
+            raise SystemExit(f"substrate drift while generating {name!r}")
+    return first
+
+
+def make_case(cfg: fxp.FixedPointConfig, rng) -> dict:
+    j32 = lambda a: jnp.asarray(np.asarray(a), jnp.int32)
+    case = {}
+
+    # --- conv (pre-activation) and the fully fused conv+PLAN+pool stage ---
+    x = _words(rng, (2, 6, 6), cfg)
+    w4 = _words(rng, (4,), cfg, extremes=1)
+    b = int(_words(rng, (1,), cfg, extremes=0)[0])
+    conv_out = _check(
+        "conv",
+        fixed_conv2d_ref(x, w4, b, cfg),
+        B.conv_fixed(j32(x), j32(w4), jnp.int32(b), cfg),
+        fixed_conv2d(j32(x), j32(w4), jnp.int32(b), cfg=cfg))
+    fused_out = _check(
+        "fused_conv_plan_pool",
+        fixed_conv2d_ref(x, w4, b, cfg, activation="plan", pool=True),
+        B.maxpool_fixed(fxp.fixed_sigmoid_plan(
+            B.conv_fixed(j32(x), j32(w4), jnp.int32(b), cfg), cfg)),
+        fixed_conv2d(j32(x), j32(w4), jnp.int32(b), cfg=cfg,
+                     activation="plan", pool=True))
+    case["conv"] = {"x": x.tolist(), "w4": w4.tolist(), "b": b,
+                    "out": conv_out.tolist(),
+                    "out_fused_plan_pool": fused_out.tolist()}
+
+    # --- standalone maxpool ---
+    xp = _words(rng, (2, 4, 4), cfg)
+    pool_out = _check(
+        "pool",
+        fixed_maxpool2x2_ref(xp),
+        B.maxpool_fixed(j32(xp)),
+        fixed_maxpool2x2(j32(xp)))
+    case["pool"] = {"x": xp.tolist(), "out": pool_out.tolist()}
+
+    # --- PLAN sigmoid: all four segments, both signs, extremes ---
+    seg = np.asarray([0.0, 0.5, -0.5, 1.0, -1.0, 1.7, -1.7, 2.375, -2.375,
+                      3.3, -3.3, 5.0, -5.0, 9.9, -9.9], np.float32)
+    xs = np.concatenate([np.asarray(fxp.to_fixed(seg, cfg), np.int64),
+                         _words(rng, (9,), cfg)]).reshape(4, 6)
+    sig_out = _check(
+        "sigmoid",
+        fixed_sigmoid_plan_ref(xs, cfg),
+        fxp.fixed_sigmoid_plan(j32(xs), cfg),
+        fixed_sigmoid(j32(xs), cfg=cfg))
+    case["sigmoid"] = {"x": xs.tolist(), "out": sig_out.tolist()}
+
+    # --- dense MAC array ---
+    xd = _words(rng, (3, 8), cfg)
+    wd = _words(rng, (8, 5), cfg)
+    bd = _words(rng, (5,), cfg, extremes=1)
+    dense_out = _check(
+        "dense",
+        fixed_dense_ref(xd, wd, bd, cfg),
+        fxp.fixed_add(fxp.fixed_matmul(j32(xd), j32(wd), cfg),
+                      j32(bd).reshape(1, -1), cfg),
+        fixed_dense(j32(xd), j32(wd), j32(bd), cfg=cfg))
+    case["dense"] = {"x": xd.tolist(), "w": wd.tolist(), "b": bd.tolist(),
+                     "out": dense_out.tolist()}
+    return case
+
+
+def main() -> None:
+    out = {"configs": {}, "cases": {}}
+    for name, cfg in CONFIGS.items():
+        out["configs"][name] = {
+            "total_bits": cfg.total_bits, "frac_bits": cfg.frac_bits,
+            "saturate": cfg.saturate, "round_nearest": cfg.round_nearest}
+        # independent but deterministic stream per config (crc32, not
+        # Python's randomized str hash)
+        out["cases"][name] = make_case(
+            cfg, np.random.default_rng(zlib.crc32(name.encode())))
+    path = pathlib.Path(__file__).parent / "fixed_golden.json"
+    path.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"wrote {path} ({path.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

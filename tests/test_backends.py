@@ -11,7 +11,7 @@ from repro.core import backends as B
 from repro.core import fixed_point as fxp
 from repro.core import smallnet
 
-REQUIRED = {"ref", "plan", "pallas", "fixed", "int8"}
+REQUIRED = {"ref", "plan", "pallas", "fixed", "fixed_pallas", "int8"}
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +21,7 @@ def setup(rng):
     return params, x
 
 
-def test_list_backends_covers_all_five():
+def test_list_backends_covers_all_required():
     assert REQUIRED <= set(B.list_backends())
 
 
@@ -98,6 +98,59 @@ def test_fixed_wrapper_equals_backend_and_is_idempotent(setup):
     leaves = jax.tree_util.tree_leaves(be.prepare_params(qfix))
     np.testing.assert_array_equal(np.asarray(leaves[0]),
                                   np.asarray(jax.tree_util.tree_leaves(qfix)[0]))
+
+
+def test_fixed_pallas_bit_exact_with_fixed(setup):
+    """The contract of the fused kernel path: int32 WORD EQUALITY with the
+    emulated fixed substrate — not closeness, identity."""
+    params, x = setup
+    got = smallnet.apply(params, x, backend="fixed_pallas")
+    want = smallnet.apply(params, x, backend="fixed")
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fixed_pallas_bit_exact_in_saturate_and_trunc_modes(setup):
+    params, x = setup
+    for kw in ({"saturate": True}, {"round_nearest": False}):
+        cfg = dataclasses.replace(fxp.Q16_16, **kw)
+        got = smallnet.apply(params, x, backend=B.FixedPallasBackend(cfg=cfg))
+        want = smallnet.apply(params, x, backend=B.FixedBackend(cfg=cfg))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=str(kw))
+
+
+def test_fixed_pallas_matches_plan_within_qmn_tolerance(setup):
+    """Same tolerance-based closeness to the float PLAN path as "fixed"."""
+    params, x = setup
+    deq = fxp.from_fixed(smallnet.apply(params, x, backend="fixed_pallas"),
+                         fxp.Q16_16)
+    plan = smallnet.apply(params, x, backend="plan")
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(plan), atol=2e-3)
+
+
+def test_fixed_pallas_native_params_passthrough(setup):
+    params, x = setup
+    qfix = smallnet.quantize_params_fixed(params)
+    np.testing.assert_array_equal(
+        np.asarray(smallnet.apply(qfix, x, backend="fixed_pallas")),
+        np.asarray(smallnet.apply(params, x, backend="fixed_pallas")))
+
+
+def test_fused_conv_act_pool_hook_matches_composition(setup):
+    """The new graph hook must equal maxpool(fused_conv_act(.)) for every
+    backend — for fixed_pallas that means the single fused launch equals
+    the three-launch composition, word for word."""
+    params, x = setup
+    for name in B.list_backends():
+        be = B.get_backend(name)
+        p = be.prepare_params(params)
+        xi = be.ingest(x)
+        fused = be.fused_conv_act_pool(xi, p["conv1"]["w"], p["conv1"]["b"])
+        composed = be.maxpool2x2(
+            be.fused_conv_act(xi, p["conv1"]["w"], p["conv1"]["b"]))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(composed),
+                                      err_msg=name)
 
 
 def test_int8_matches_ref_within_ptq_tolerance(setup):

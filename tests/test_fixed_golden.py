@@ -1,0 +1,114 @@
+"""Golden-vector regression: frozen int32 words for every fixed-point stage.
+
+tests/golden/fixed_golden.json pins the bit-exact int32 outputs of each
+pipeline stage (conv, maxpool, PLAN sigmoid, dense, and the fused
+conv+PLAN+pool launch) for Q16.16 and Q8.8 in wraparound, saturate, and
+truncate modes, with max_int/min_int words injected in the inputs.  Both
+the emulated "fixed" substrate and the fixed_pallas kernels must reproduce
+every word — any arithmetic drift (rounding, wrap order, limb bugs) fails
+here first, against vectors that cannot silently regenerate themselves.
+
+Regenerate (only after an INTENTIONAL semantics change) with:
+    PYTHONPATH=src python tests/golden/gen_fixed_golden.py
+"""
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv import (fixed_conv2d, fixed_maxpool2x2,
+                                      fixed_sigmoid)
+from repro.kernels.quant_matmul import fixed_dense
+
+_GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "fixed_golden.json").read_text())
+
+CFGS = {name: fxp.FixedPointConfig(**spec)
+        for name, spec in _GOLDEN["configs"].items()}
+
+
+def _i32(a):
+    return jnp.asarray(np.asarray(a), jnp.int32)
+
+
+def _assert_words(got, want, what):
+    np.testing.assert_array_equal(
+        np.asarray(got, np.int64), np.asarray(want, np.int64),
+        err_msg=f"{what}: fixed-point words drifted from golden vectors")
+
+
+@pytest.fixture(params=sorted(CFGS), ids=sorted(CFGS))
+def case(request):
+    return CFGS[request.param], _GOLDEN["cases"][request.param]
+
+
+def test_golden_covers_both_formats_and_modes():
+    cfgs = list(CFGS.values())
+    assert {c.total_bits for c in cfgs} == {32, 16}
+    assert any(c.saturate for c in cfgs) and any(not c.saturate for c in cfgs)
+    assert any(not c.round_nearest for c in cfgs)
+
+
+def test_golden_inputs_exercise_extreme_words(case):
+    cfg, g = case
+    x = np.asarray(g["conv"]["x"], np.int64)
+    assert cfg.max_int in x and cfg.min_int in x, \
+        "golden conv input must contain max_int and min_int words"
+
+
+def test_conv_golden_fixed_emulated(case):
+    cfg, g = case
+    got = B.conv_fixed(_i32(g["conv"]["x"]), _i32(g["conv"]["w4"]),
+                       jnp.int32(g["conv"]["b"]), cfg)
+    _assert_words(got, g["conv"]["out"], "emulated conv")
+
+
+def test_conv_golden_fixed_pallas(case):
+    cfg, g = case
+    got = fixed_conv2d(_i32(g["conv"]["x"]), _i32(g["conv"]["w4"]),
+                       jnp.int32(g["conv"]["b"]), cfg=cfg)
+    _assert_words(got, g["conv"]["out"], "pallas conv")
+
+
+def test_fused_conv_plan_pool_golden(case):
+    cfg, g = case
+    want = g["conv"]["out_fused_plan_pool"]
+    emu = B.maxpool_fixed(fxp.fixed_sigmoid_plan(
+        B.conv_fixed(_i32(g["conv"]["x"]), _i32(g["conv"]["w4"]),
+                     jnp.int32(g["conv"]["b"]), cfg), cfg))
+    _assert_words(emu, want, "emulated conv+plan+pool")
+    got = fixed_conv2d(_i32(g["conv"]["x"]), _i32(g["conv"]["w4"]),
+                       jnp.int32(g["conv"]["b"]), cfg=cfg,
+                       activation="plan", pool=True)
+    _assert_words(got, want, "fused pallas conv+plan+pool")
+
+
+def test_pool_golden_both_substrates(case):
+    cfg, g = case
+    _assert_words(B.maxpool_fixed(_i32(g["pool"]["x"])), g["pool"]["out"],
+                  "emulated maxpool")
+    _assert_words(fixed_maxpool2x2(_i32(g["pool"]["x"])), g["pool"]["out"],
+                  "pallas maxpool")
+
+
+def test_sigmoid_golden_both_substrates(case):
+    cfg, g = case
+    _assert_words(fxp.fixed_sigmoid_plan(_i32(g["sigmoid"]["x"]), cfg),
+                  g["sigmoid"]["out"], "emulated PLAN sigmoid")
+    _assert_words(fixed_sigmoid(_i32(g["sigmoid"]["x"]), cfg=cfg),
+                  g["sigmoid"]["out"], "pallas PLAN sigmoid")
+
+
+def test_dense_golden_both_substrates(case):
+    cfg, g = case
+    emu = fxp.fixed_add(
+        fxp.fixed_matmul(_i32(g["dense"]["x"]), _i32(g["dense"]["w"]), cfg),
+        _i32(g["dense"]["b"]).reshape(1, -1), cfg)
+    _assert_words(emu, g["dense"]["out"], "emulated dense")
+    got = fixed_dense(_i32(g["dense"]["x"]), _i32(g["dense"]["w"]),
+                      _i32(g["dense"]["b"]), cfg=cfg)
+    _assert_words(got, g["dense"]["out"], "pallas dense")

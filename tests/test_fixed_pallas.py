@@ -1,0 +1,169 @@
+"""fixed_conv / fixed_dense Pallas kernels vs the numpy int64 oracle and the
+emulated jnp fixed path — randomized word-level parity that runs in tier-1
+without hypothesis (the deeper property battery lives in
+test_fixed_pallas_props.py and skips cleanly when hypothesis is absent)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv import (fixed_conv2d, fixed_conv2d_ref,
+                                      fixed_dense_ref, fixed_maxpool2x2,
+                                      fixed_maxpool2x2_ref, fixed_sigmoid,
+                                      fixed_sigmoid_plan_ref)
+from repro.kernels.fixed_conv.ref import random_words as _words
+from repro.kernels.quant_matmul import fixed_dense
+
+# one canonical format/mode matrix (core/fixed_point.py) drives every battery
+CFGS = list(fxp.STANDARD_CONFIGS.values())
+_IDS = list(fxp.STANDARD_CONFIGS)
+
+
+def _i32(a):
+    return jnp.asarray(np.asarray(a), jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@pytest.mark.parametrize("activation,pool", [(None, False), ("plan", False),
+                                             (None, True), ("plan", True)])
+def test_fixed_conv_pipeline_vs_oracle_and_emulated(cfg, activation, pool, rng):
+    x = _words(rng, (2, 8, 8), cfg)
+    w4 = _words(rng, (4,), cfg, extremes=1)
+    b = int(_words(rng, (1,), cfg, extremes=0)[0])
+    got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(b), cfg=cfg,
+                       activation=activation, pool=pool)
+    want = fixed_conv2d_ref(x, w4, b, cfg, activation=activation, pool=pool)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    # and the emulated composition produces the same words
+    emu = B.conv_fixed(_i32(x), _i32(w4), jnp.int32(b), cfg)
+    if activation == "plan":
+        emu = fxp.fixed_sigmoid_plan(emu, cfg)
+    if pool:
+        emu = B.maxpool_fixed(emu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(emu))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+def test_fixed_conv_stride2_vs_oracle(cfg, rng):
+    """Mirror of the conv2d stride tests: stride realized by output
+    decimation after the full stride-1 fused pipeline, still bit-exact."""
+    x = _words(rng, (2, 12, 10), cfg)
+    w4 = _words(rng, (4,), cfg, extremes=1)
+    got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(7), cfg=cfg, stride=2)
+    assert got.shape == (2, 6, 5)
+    want = fixed_conv2d_ref(x, w4, 7, cfg, stride=2)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_fixed_conv_pool_and_stride_mutually_exclusive():
+    x = jnp.zeros((1, 8, 8), jnp.int32)
+    w4 = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="pool and stride"):
+        fixed_conv2d(x, w4, jnp.int32(0), pool=True, stride=2)
+
+
+def test_fixed_conv_bad_activation_rejected():
+    x = jnp.zeros((1, 8, 8), jnp.int32)
+    with pytest.raises(ValueError, match="activation"):
+        fixed_conv2d(x, jnp.zeros((4,), jnp.int32), jnp.int32(0),
+                     activation="sigmoid")
+
+
+def test_fixed_conv_vmem_guard():
+    x = jnp.zeros((1, 1536, 1536), jnp.int32)
+    with pytest.raises(ValueError, match="VMEM"):
+        fixed_conv2d(x, jnp.zeros((4,), jnp.int32), jnp.int32(0))
+
+
+@pytest.mark.parametrize("H,W", [(14, 14), (7, 7), (15, 9)])
+def test_fixed_maxpool_odd_crop_vs_oracle(H, W, rng):
+    x = _words(rng, (3, H, W), fxp.Q16_16)
+    got = fixed_maxpool2x2(_i32(x))
+    assert got.shape == (3, H // 2, W // 2)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  fixed_maxpool2x2_ref(x))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@pytest.mark.parametrize("shape", [(10,), (6, 10), (2, 7, 7)])
+def test_fixed_sigmoid_shapes_vs_oracle(cfg, shape, rng):
+    x = _words(rng, shape, cfg)
+    got = fixed_sigmoid(_i32(x), cfg=cfg)
+    assert got.shape == shape and got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  fixed_sigmoid_plan_ref(x, cfg))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@pytest.mark.parametrize("M,K,N", [(6, 49, 10), (1, 8, 5), (130, 16, 4)])
+def test_fixed_dense_vs_oracle_and_emulated(cfg, M, K, N, rng):
+    x = _words(rng, (M, K), cfg)
+    w = _words(rng, (K, N), cfg)
+    b = _words(rng, (N,), cfg, extremes=1)
+    got = fixed_dense(_i32(x), _i32(w), _i32(b), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  fixed_dense_ref(x, w, b, cfg))
+    emu = fxp.fixed_add(fxp.fixed_matmul(_i32(x), _i32(w), cfg),
+                        _i32(b).reshape(1, -1), cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(emu))
+
+
+def test_fixed_dense_default_bias_is_zero_words(rng):
+    x = _words(rng, (3, 8), fxp.Q16_16)
+    w = _words(rng, (8, 4), fxp.Q16_16)
+    got = fixed_dense(_i32(x), _i32(w), cfg=fxp.Q16_16)
+    want = fixed_dense_ref(x, w, np.zeros(4, np.int64), fxp.Q16_16)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+# ---------------------------------------------------------------------------
+# Rounding-semantics audit (the latent divergence fixed in this PR)
+# ---------------------------------------------------------------------------
+
+def test_plan_sigmoid_truncate_mode_is_pure_shift(rng):
+    """Regression: in truncate mode the PLAN slopes must be the raw hardware
+    shifter `ax >> k` — no rounding bit anywhere in the pipeline."""
+    cfg = fxp.FixedPointConfig(32, 16, round_nearest=False)
+    x = _words(rng, (512,), cfg)
+    got = np.asarray(fxp.fixed_sigmoid_plan(_i32(x), cfg), np.int64)
+    # int32 |x| wraps at INT32_MIN (|-2^31| stays -2^31), like jnp.abs
+    ax = ((np.abs(x) + 2**31) % 2**32) - 2**31
+    c = lambda v: int(np.asarray(fxp.to_fixed(v, cfg)))
+    y = np.where(ax >= c(5.0), c(1.0),
+                 np.where(ax >= c(2.375), (ax >> 5) + c(0.84375),
+                          np.where(ax >= c(1.0), (ax >> 3) + c(0.625),
+                                   (ax >> 2) + c(0.5))))
+    want = np.where(x < 0, c(1.0) - y, y)
+    np.testing.assert_array_equal(got, want)
+    # and the Pallas kernel uses the identical shift semantics
+    np.testing.assert_array_equal(
+        np.asarray(fixed_sigmoid(_i32(x), cfg=cfg), np.int64), got)
+
+
+def test_plan_sigmoid_round_nearest_adds_the_rounding_bit():
+    """With round_nearest the slope shifts must round exactly like
+    `fixed_mul` does (add bit k-1), so emulated and kernel paths share one
+    shift rule.  2.5 in Q16.16: |x|>>3 has bit 2 set -> +1 word."""
+    cfg_rn = fxp.Q16_16
+    cfg_tr = fxp.FixedPointConfig(32, 16, round_nearest=False)
+    x = jnp.asarray([int(fxp.to_fixed(1.0, cfg_rn)) + 4], jnp.int32)  # 65540
+    rn = int(fxp.fixed_sigmoid_plan(x, cfg_rn)[0])
+    tr = int(fxp.fixed_sigmoid_plan(x, cfg_tr)[0])
+    assert rn == tr + 1        # 65540 >> 3 truncates; rounding bit adds one
+    assert int(fixed_sigmoid(x, cfg=cfg_rn)[0]) == rn
+    assert int(fixed_sigmoid(x, cfg=cfg_tr)[0]) == tr
+
+
+def test_conv_and_sigmoid_share_shift_semantics_across_modes(rng):
+    """The fused kernel and the emulated path agree word-for-word in BOTH
+    rounding modes — the audit's acceptance condition."""
+    for rnearest in (True, False):
+        cfg = fxp.FixedPointConfig(32, 16, round_nearest=rnearest)
+        x = _words(rng, (2, 6, 6), cfg)
+        w4 = _words(rng, (4,), cfg, extremes=1)
+        got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(3), cfg=cfg,
+                           activation="plan")
+        emu = fxp.fixed_sigmoid_plan(
+            B.conv_fixed(_i32(x), _i32(w4), jnp.int32(3), cfg), cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(emu))

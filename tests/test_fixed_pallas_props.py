@@ -1,0 +1,131 @@
+"""Hypothesis property battery: fixed_pallas kernels vs the numpy int64
+oracle over adversarial word distributions.
+
+The strategies deliberately mix uniform int32 words with max_int/min_int
+and near-boundary values so two's-complement wraparound (and the saturate
+decision) is exercised on every run — smooth-range inputs never hit the
+wrap paths that distinguish a correct limb decomposition from a lucky one.
+
+Tier-1 runs the bounded versions (`max_examples` small); the `slow`-marked
+deep battery multiplies the example budget for local soak runs:
+
+    pytest tests/test_fixed_pallas_props.py -m slow   # deep
+    pytest -m "not slow"                              # bounded (CI)
+"""
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv import (fixed_conv2d, fixed_conv2d_ref,
+                                      fixed_dense_ref, fixed_sigmoid,
+                                      fixed_sigmoid_plan_ref)
+from repro.kernels.quant_matmul import fixed_dense
+
+# one canonical format/mode matrix (core/fixed_point.py) drives every battery
+CFGS = list(fxp.STANDARD_CONFIGS.values())
+_IDS = list(fxp.STANDARD_CONFIGS)
+
+
+def _word_st(cfg):
+    """Words biased toward the dangerous edges of the format."""
+    edges = st.sampled_from([cfg.max_int, cfg.min_int, cfg.max_int - 1,
+                             cfg.min_int + 1, -1, 0, 1])
+    return st.one_of(st.integers(cfg.min_int, cfg.max_int), edges)
+
+
+def _grid(cfg, h, w, b=1):
+    return st.lists(st.lists(st.lists(_word_st(cfg), min_size=w, max_size=w),
+                             min_size=h, max_size=h),
+                    min_size=b, max_size=b)
+
+
+def _i32(a):
+    return jnp.asarray(np.asarray(a, np.int64), jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@hp.given(data=st.data())
+@hp.settings(max_examples=25, deadline=None)
+def test_conv_pipeline_words_match_oracle(cfg, data):
+    h = data.draw(st.integers(2, 6), label="H")
+    w = data.draw(st.integers(2, 6), label="W")
+    x = np.asarray(data.draw(_grid(cfg, h, w)), np.int64)
+    w4 = np.asarray(data.draw(st.lists(_word_st(cfg), min_size=4, max_size=4)),
+                    np.int64)
+    b = data.draw(_word_st(cfg), label="bias")
+    act = data.draw(st.sampled_from([None, "plan"]), label="act")
+    got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(b), cfg=cfg,
+                       activation=act)
+    want = fixed_conv2d_ref(x, w4, b, cfg, activation=act)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@hp.given(data=st.data())
+@hp.settings(max_examples=25, deadline=None)
+def test_sigmoid_words_match_oracle(cfg, data):
+    x = np.asarray(
+        data.draw(st.lists(_word_st(cfg), min_size=1, max_size=64)), np.int64)
+    got = fixed_sigmoid(_i32(x), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  fixed_sigmoid_plan_ref(x, cfg))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@hp.given(data=st.data())
+@hp.settings(max_examples=25, deadline=None)
+def test_dense_words_match_oracle(cfg, data):
+    m = data.draw(st.integers(1, 5), label="M")
+    k = data.draw(st.integers(1, 8), label="K")
+    n = data.draw(st.integers(1, 6), label="N")
+    flat = st.lists(_word_st(cfg), min_size=m * k + k * n + n,
+                    max_size=m * k + k * n + n)
+    v = np.asarray(data.draw(flat), np.int64)
+    x, wgt, b = (v[:m * k].reshape(m, k), v[m * k:m * k + k * n].reshape(k, n),
+                 v[m * k + k * n:])
+    got = fixed_dense(_i32(x), _i32(wgt), _i32(b), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  fixed_dense_ref(x, wgt, b, cfg))
+
+
+@hp.given(data=st.data())
+@hp.settings(max_examples=50, deadline=None)
+def test_emulated_and_pallas_agree_even_if_oracle_wrong(data):
+    """Independent cross-check: the two jnp substrates agree with EACH OTHER
+    on fresh random words (so a shared-oracle mistake can't mask a split)."""
+    cfg = data.draw(st.sampled_from(CFGS), label="cfg")
+    from repro.core import backends as B
+    x = np.asarray(data.draw(_grid(cfg, 4, 4, b=2)), np.int64)
+    w4 = np.asarray(data.draw(st.lists(_word_st(cfg), min_size=4, max_size=4)),
+                    np.int64)
+    b = data.draw(_word_st(cfg), label="bias")
+    got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(b), cfg=cfg,
+                       activation="plan", pool=True)
+    emu = B.maxpool_fixed(fxp.fixed_sigmoid_plan(
+        B.conv_fixed(_i32(x), _i32(w4), jnp.int32(b), cfg), cfg))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(emu))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cfg", CFGS, ids=_IDS)
+@hp.given(data=st.data())
+@hp.settings(max_examples=400, deadline=None)
+def test_deep_conv_battery(cfg, data):
+    """The soak version: same property, 16x the example budget."""
+    h = data.draw(st.integers(2, 10), label="H")
+    w = data.draw(st.integers(2, 10), label="W")
+    x = np.asarray(data.draw(_grid(cfg, h, w, b=2)), np.int64)
+    w4 = np.asarray(data.draw(st.lists(_word_st(cfg), min_size=4, max_size=4)),
+                    np.int64)
+    b = data.draw(_word_st(cfg), label="bias")
+    act = data.draw(st.sampled_from([None, "plan"]), label="act")
+    pool = data.draw(st.booleans(), label="pool")
+    got = fixed_conv2d(_i32(x), _i32(w4), jnp.int32(b), cfg=cfg,
+                       activation=act, pool=pool)
+    want = fixed_conv2d_ref(x, w4, b, cfg, activation=act, pool=pool)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)

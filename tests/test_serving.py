@@ -138,3 +138,18 @@ def test_vision_engine_fixed_backend_int_scores(vision_setup):
     want = smallnet.predict(smallnet.apply(params, jnp.asarray(images[:10]),
                                            backend="fixed"))
     assert [r.pred for r in res] == [int(t) for t in want]
+
+
+def test_vision_engine_fixed_pallas_serves_bit_exact_words(vision_setup):
+    """The fused fixed kernel path through the FULL serving loop (padded
+    batches, jitted step) must return the same int32 score words as an
+    emulated-fixed engine serving the identical workload."""
+    params, images = vision_setup
+    res_k = VisionEngine(params, backend="fixed_pallas",
+                         batch_size=8).serve(list(images[:20]))
+    res_e = VisionEngine(params, backend="fixed",
+                         batch_size=8).serve(list(images[:20]))
+    assert all(r.scores.dtype == np.int32 for r in res_k)
+    np.testing.assert_array_equal(np.stack([r.scores for r in res_k]),
+                                  np.stack([r.scores for r in res_e]))
+    assert [r.pred for r in res_k] == [r.pred for r in res_e]
