@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 from repro.core import backends, deploy, smallnet
 from repro.data import synth_mnist
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.router import ReplicaRouter
 from repro.serving.vision_engine import VisionEngine
 
 # smallNet single-image inference cost (analytic)
@@ -83,6 +85,29 @@ def run(trained):
         rows.append((f"latency/engine_{name}", s["latency_mean_ms"] * 1e3,
                      f"p50={s['latency_p50_ms']:.2f}ms p95={s['latency_p95_ms']:.2f}ms "
                      f"qps={s['throughput_qps']:.0f} n={s['n']} batch={s['batch_size']}"))
+
+    # serving-topology sweep: the same 128-request workload through (a) one
+    # engine, (b) one engine whose jitted step shards the batch across the
+    # serving mesh (degenerate on 1 device, batch-DP on a pod slice), and
+    # (c) a least-loaded router over two replicas drained concurrently —
+    # engine -> mesh -> fleet, the three rungs of the scaling ladder
+    mesh = make_serving_mesh()
+    topo = {
+        "single": lambda: VisionEngine(params, backend="pallas", batch_size=32),
+        "sharded": lambda: VisionEngine(params, backend="pallas", batch_size=32,
+                                        mesh=mesh),
+        "routed_x2": lambda: ReplicaRouter.from_backends(
+            params, ["pallas", "pallas"], batch_size=32, mesh=mesh),
+    }
+    for label, build in topo.items():
+        srv = build()
+        srv.serve(list(reqs))
+        s = srv.stats()
+        extra = (f"mesh_devices={s['mesh_devices']}" if "mesh_devices" in s
+                 else f"replicas={s['replicas']} served_by={s['served_by']}")
+        rows.append((f"latency/topology_{label}", s["latency_mean_ms"] * 1e3,
+                     f"p95={s['latency_p95_ms']:.2f}ms "
+                     f"qps={s['throughput_qps']:.0f} {extra}"))
 
     # TPU v5e roofline estimate for the deployed conv pipeline
     comp = _FLOPS / 197e12

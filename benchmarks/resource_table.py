@@ -11,7 +11,6 @@ import json
 import pathlib
 
 from repro.core import smallnet
-import jax
 
 _TDP_W = 200.0
 _HERE = pathlib.Path(__file__).resolve().parent

@@ -10,7 +10,6 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core import ptq
-from repro.models import model as M
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.serving.engine import Engine, Request
 

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import backends, deploy, smallnet
 from repro.data import synth_mnist
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.router import ReplicaRouter
 from repro.serving.vision_engine import VisionEngine
 
 
@@ -62,14 +64,35 @@ def main():
           f"differ ({'bit-exact' if n_drift == 0 else 'DRIFT'})")
 
     print(f"== 5. streaming vision engine on backend={args.backend!r} ==")
-    eng = VisionEngine(res.params, backend=args.backend, batch_size=32)
+    # one jitted step sharded over the serving mesh: the batch axis splits
+    # across every local device (degenerate on 1 CPU device, batch-DP on a
+    # pod slice — same code either way)
+    mesh = make_serving_mesh()
+    eng = VisionEngine(res.params, backend=args.backend, batch_size=32,
+                       mesh=mesh)
     eng.serve(list(synth_mnist.make_dataset(128, seed=6)[0]))
     s = eng.stats()
     print(f"   served n={s['n']} in {s['batches']} batched steps "
-          f"(batch={s['batch_size']}, padded_slots={s['padded_slots']})")
+          f"(batch={s['batch_size']}, padded_slots={s['padded_slots']}, "
+          f"mesh_devices={s['mesh_devices']})")
     print(f"   latency mean={s['latency_mean_ms']:.2f}ms "
           f"p50={s['latency_p50_ms']:.2f}ms p95={s['latency_p95_ms']:.2f}ms "
           f"throughput={s['throughput_qps']:.0f} img/s")
+
+    print("== 5b. replica router: engine -> replicas -> mesh ==")
+    # fleet-level serving: a least-loaded router over two replicas (here two
+    # backends of the same weights — the paper's CPU + fabric, side by side),
+    # drained concurrently with failover and aggregated fleet stats
+    router = ReplicaRouter.from_backends(res.params,
+                                         [args.backend, "fixed_pallas"],
+                                         batch_size=32, mesh=mesh)
+    router.serve(list(synth_mnist.make_dataset(128, seed=7)[0]))
+    fs = router.stats()
+    print(f"   fleet served n={fs['n']} over {fs['replicas']} replicas "
+          f"(healthy={fs['healthy']}, served_by={fs['served_by']})")
+    print(f"   fleet latency p50={fs['latency_p50_ms']:.2f}ms "
+          f"p95={fs['latency_p95_ms']:.2f}ms "
+          f"throughput={fs['throughput_qps']:.0f} img/s")
 
     print("== 6. latency (paper §IV-B: 560 ms CPU -> 109 ms FPGA, 5.1x) ==")
     sw = deploy.measure_latency(smallnet.forward, res.params)

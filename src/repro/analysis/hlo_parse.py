@@ -97,6 +97,66 @@ def _result_segment(rhs: str) -> str:
     return rhs[:idx] if idx > 0 else rhs
 
 
+def _call_args(rhs: str, op: str) -> str | None:
+    """The argument list of `op(...)` in rhs, paren-balanced — operand
+    layouts like '{1,0:T(8,128)}' contain parens, so a [^)]* capture would
+    truncate the list at the first ')'."""
+    start = rhs.find(op + "(")
+    if start < 0:
+        return None
+    i = start + len(op) + 1
+    depth = 1
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[i:j]
+    return None
+
+
+def _split_operands(arglist: str) -> list[str]:
+    """Split an instruction argument list on top-level commas only — shape
+    dims ('f32[32,64]') and layouts ('{1,0}') contain commas too."""
+    out, cur, depth = [], [], 0
+    for ch in arglist:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operand_dims(arglist: str, idx: int, tab: dict) -> list[int]:
+    """Dims of the idx-th operand of an instruction's argument list.
+
+    Newer XLA prints operands TYPED ('f32[32,64]{1,0} %name'); older
+    prints bare names ('%name') — read the inline shape when present,
+    fall back to the symbol table otherwise."""
+    ops = _split_operands(arglist)
+    if idx >= len(ops):
+        return []
+    operand = ops[idx]
+    shapes = _shape_list(operand.split("%")[0])   # inline type, if printed
+    if shapes:
+        dims = shapes[0][1]
+    else:
+        mname = re.search(r"%[\w\.\-]+", operand)
+        sym = tab.get(mname.group(0)) if mname else None
+        if sym is None:
+            return []
+        dims = sym[1]
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
 def _trip_count(cond_lines: list[str]) -> int:
     consts = {}
     for ls in cond_lines:
@@ -208,17 +268,14 @@ def analyze_hlo(txt: str) -> HloSummary:
                 if not shapes:
                     continue
                 out_n = _elems(shapes[0][1])
-                args = re.search(r"dot\(([^)]*)\)", rhs)
                 k = 1
-                if args:
-                    lhs_name = args.group(1).split(",")[0].strip()
-                    lhs = tab.get(lhs_name)
-                    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
-                    if lhs and mcd:
-                        dims = [int(d) for d in lhs[1].split(",")] if lhs[1] else []
-                        for i in (int(x) for x in mcd.group(1).split(",") if x):
-                            if i < len(dims):
-                                k *= dims[i]
+                mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                args = _call_args(rhs, "dot")
+                if args is not None and mcd:
+                    dims = _operand_dims(args, 0, tab)
+                    for i in (int(x) for x in mcd.group(1).split(",") if x):
+                        if i < len(dims):
+                            k *= dims[i]
                 f = 2.0 * out_n * k
                 flops += m * f
                 flops_once += f
@@ -226,12 +283,14 @@ def analyze_hlo(txt: str) -> HloSummary:
                 shapes = _shape_list(rhs)
                 if len(shapes) >= 2:
                     out_n = _elems(shapes[0][1])
-                    args = re.search(r"convolution\(([^)]*)\)", rhs)
+                    args = _call_args(rhs, "convolution")
                     kvol = 1
-                    if args:
-                        names = [a.strip() for a in args.group(1).split(",")]
-                        if len(names) > 1 and names[1] in tab:
-                            kvol = _elems(tab[names[1]][1])
+                    if args is not None:
+                        kdims = _operand_dims(args, 1, tab)
+                        if kdims:
+                            kvol = 1
+                            for d in kdims:
+                                kvol *= d
                     f = 2.0 * out_n * kvol
                     flops += m * f
                     flops_once += f

@@ -21,13 +21,9 @@ compiled compute is useful.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
-from typing import Any
 
-import jax
 
-from repro.analysis.hlo_parse import analyze_hlo, HloSummary
+from repro.analysis.hlo_parse import analyze_hlo
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------

@@ -17,7 +17,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from repro.analysis.roofline import roofline_from_artifacts, to_dict
 from repro.configs.base import ARCH_IDS, SHAPES, get_config

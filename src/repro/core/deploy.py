@@ -13,10 +13,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import fixed_point as fxp
-from repro.core import ptq, smallnet
+from repro.core import smallnet
 from repro.data import synth_mnist
 from repro.optim import AdamConfig, adam_init, adam_update
 
@@ -30,8 +28,12 @@ class TrainResult:
 
 
 def train_smallnet(n_train: int = 8000, n_test: int = 2000, epochs: int = 8,
-                   batch_size: int = 64, lr: float = 5e-3, seed: int = 0) -> TrainResult:
-    """Paper §III-A: Adam, batch 64, 8 epochs."""
+                   batch_size: int = 64, lr: float = 2e-2, seed: int = 0) -> TrainResult:
+    """Paper §III-A: Adam, batch 64, 8 epochs.
+
+    lr 2e-2 (not Keras' 1e-3 default): the 510-parameter net's features move
+    glacially at small steps (see smallnet.loss_fn); 2e-2 trains to >= 0.80
+    on the MNIST proxy across seeds where 5e-3 sat at chance for epochs."""
     xtr, ytr = synth_mnist.make_dataset(n_train, seed=seed)
     xte, yte = synth_mnist.make_dataset(n_test, seed=seed + 1)
     params = smallnet.init_params(jax.random.key(seed))

@@ -18,11 +18,9 @@ documented limb ranges (proved in tests against a numpy int64 oracle).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,7 +205,6 @@ def fixed_sigmoid_plan(x: jnp.ndarray, cfg: FixedPointConfig = Q16_16) -> jnp.nd
     so they follow `cfg.round_nearest` just like `fixed_mul` (truncate mode
     is the pure shifter the PLAN hardware uses).
     """
-    f = cfg.frac_bits
     ax = jnp.abs(x)
     c5 = to_fixed(5.0, cfg)
     c2375 = to_fixed(2.375, cfg)

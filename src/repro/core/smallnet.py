@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core import backends as B
 from repro.core import fixed_point as fxp
 from repro.core import ptq
+from repro.distributed import sharding as shd
 
 
 def init_params(key: jax.Array) -> dict:
@@ -47,6 +48,32 @@ def param_count(params: dict) -> int:
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
 
 
+def _constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin dim 0 to the "batch" logical axis, replicate the rest.
+
+    Activations change rank across backends ((B,H,W,C) float NHWC,
+    (B,H,W) fixed-point words, (B,F) after flatten), so the spec is built
+    from the rank.  Outside a `sharding_rules` context this is a no-op —
+    the unsharded single-device path is byte-identical to before.
+    """
+    return shd.constrain(x, "batch", *(None,) * (x.ndim - 1))
+
+
+def _trunk(be: B.Backend, p: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """The network up to (and including) the dense layer, PRE-activation —
+    the single definition of the paper's pipeline that `apply` (deployed,
+    + output sigmoid) and `forward_logits` (training view) both run."""
+    x = _constrain_batch(be.ingest(images))
+    # conv+act+pool goes through one hook so backends with a fully fused
+    # stage (fixed_pallas: windowing+MAC+bias+PLAN+maxpool in ONE Pallas
+    # launch) keep the paper's pipeline structure; the default composes
+    # fused_conv_act and maxpool2x2 exactly as before.
+    x = _constrain_batch(be.fused_conv_act_pool(x, p["conv1"]["w"], p["conv1"]["b"]))
+    x = _constrain_batch(be.fused_conv_act_pool(x, p["conv2"]["w"], p["conv2"]["b"]))
+    x = be.flatten(x)                                    # (B, 49)
+    return be.dense(x, p["dense"]["w"], p["dense"]["b"])
+
+
 def apply(params: dict, images: jnp.ndarray, *,
           backend: str | B.Backend = "ref") -> jnp.ndarray:
     """Single entry point: images (B,28,28,1) -> class scores (B,10).
@@ -55,18 +82,15 @@ def apply(params: dict, images: jnp.ndarray, *,
     idempotently) or already backend-native (e.g. the int32 pytree from
     `quantize_params_fixed`).  Scores are float in (0,1) for float-valued
     backends and Qm.n int32 words for "fixed" — `predict` handles both.
+
+    Under `distributed.sharding.sharding_rules` (e.g. the vision-serving
+    preset `make_vision_rules(mesh)`), every activation is constrained to
+    shard its batch dim across the mesh — per-example compute is
+    independent, so GSPMD splits the whole pipeline with zero collectives.
     """
     be = B.get_backend(backend)
     p = be.prepare_params(params)
-    x = be.ingest(images)
-    # conv+act+pool goes through one hook so backends with a fully fused
-    # stage (fixed_pallas: windowing+MAC+bias+PLAN+maxpool in ONE Pallas
-    # launch) keep the paper's pipeline structure; the default composes
-    # fused_conv_act and maxpool2x2 exactly as before.
-    x = be.fused_conv_act_pool(x, p["conv1"]["w"], p["conv1"]["b"])
-    x = be.fused_conv_act_pool(x, p["conv2"]["w"], p["conv2"]["b"])
-    x = be.flatten(x)                                    # (B, 49)
-    return be.sigmoid(be.dense(x, p["dense"]["w"], p["dense"]["b"]))
+    return _constrain_batch(be.sigmoid(_trunk(be, p, images)))
 
 
 # ---------------------------------------------------------------------------
@@ -121,17 +145,30 @@ def predict(scores: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(scores, axis=-1)
 
 
-def loss_fn(params: dict, images: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
-    """Categorical crossentropy (paper §III-A) over the sigmoid class scores.
+def forward_logits(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """Pre-sigmoid class scores (B,10) on the float reference path.
 
-    Training-only adaptation (documented in DESIGN.md): the raw normalized-CCE
-    over sigmoid outputs has vanishing gradients at this tiny width; we apply
-    CCE to temperature-sharpened scores instead.  log_softmax is monotone in
-    the scores, so the *deployed* network (sigmoid + Max Finder argmax) is
-    bit-identical to the paper's — only the training signal changes.
+    sigmoid is monotone, so argmax over these logits equals the deployed
+    network's Max Finder over sigmoid scores — this is the training-side
+    view of the SAME network (`_trunk` is shared with `apply`), not a
+    different one."""
+    be = B.get_backend("ref")
+    return _trunk(be, be.prepare_params(params), images)
+
+
+def loss_fn(params: dict, images: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Categorical crossentropy (paper §III-A) over the class scores.
+
+    Training-only adaptation (documented in DESIGN.md): CCE through the
+    output sigmoid has vanishing, seed-fragile gradients at this tiny width
+    (two cascaded single-filter sigmoid convs start with near-constant
+    features, and the earlier temperature-sharpened-scores variant stayed at
+    chance for whole epochs on some seeds).  We apply CCE to the PRE-sigmoid
+    logits instead: log_softmax is shift-invariant and sigmoid is monotone,
+    so the *deployed* network (sigmoid + Max Finder argmax) is bit-identical
+    to the paper's — only the training signal changes.
     """
-    scores = forward(params, images)                    # sigmoid scores in (0,1)
-    logp = jax.nn.log_softmax(8.0 * (scores - 0.5))
+    logp = jax.nn.log_softmax(forward_logits(params, images))
     onehot = jax.nn.one_hot(labels, 10)
     return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
 

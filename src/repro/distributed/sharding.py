@@ -16,7 +16,6 @@ Baseline policy (DESIGN.md §5):
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import threading
 from typing import Any, Mapping
 
@@ -114,6 +113,44 @@ def make_rules(*, mesh_axes: tuple[str, ...], global_batch: int,
         "layers": None,
     }
     return rules
+
+
+def vision_batch_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes the vision serving path shards its batch over: every
+    data-parallel axis present ("pod"/"data"), else the first mesh axis (a
+    bare single-axis serving mesh still gets batch DP)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else (mesh.axis_names[0],)
+
+
+def vision_batch_multiple(mesh) -> int:
+    """Per-step batch sizes must be a multiple of this (the product of the
+    batch mesh axes) so every device gets equal full shards."""
+    mult = 1
+    for a in vision_batch_axes(mesh):
+        mult *= mesh.shape[a]
+    return mult
+
+
+def make_vision_rules(mesh) -> dict[str, Any]:
+    """Vision-serving preset: shard ONLY the batch axis over the mesh's
+    data-parallel axes and replicate everything else.
+
+    smallNet carries 510 parameters (~2 KB) — replicating weights is free,
+    so the whole scaling story is batch DP: one jitted step whose inputs /
+    activations / outputs are split along "batch" across the mesh (the JAX
+    analogue of replicating the paper's fabric pipeline per compute unit
+    and partitioning the DMA stream).  Degenerates to a no-op on a 1-device
+    mesh, so the same engine code runs in smoke tests and at scale.
+    """
+    axes = vision_batch_axes(mesh)
+    batch = axes if len(axes) > 1 else axes[0]
+    return {
+        "batch": batch,
+        # spatial / feature / class dims stay replicated
+        "height": None, "width": None, "channels": None,
+        "features": None, "classes": None,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,7 @@ def _check_vmem(Hp: int, Wp: int, H1: int, W1: int) -> None:
         raise ValueError(
             f"image block exceeds VMEM budget: {vmem} B "
             f"(input {Hp}x{Wp} + pre-decimation output {H1}x{W1} "
-            f"with limb temporaries)")
+            "with limb temporaries)")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "activation", "pool",

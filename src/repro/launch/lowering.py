@@ -6,11 +6,9 @@ benchmarks/.  Never sets XLA flags itself — the caller controls device count.
 from __future__ import annotations
 
 import dataclasses
-import gc
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config

@@ -5,18 +5,36 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: `axis_types` landed after 0.4.x;
+    pass it where it exists (Auto on every axis, the behaviour the sharded
+    paths assume), plain call where it doesn't."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {} if axis_type is None else {
+        "axis_types": (axis_type.Auto,) * len(axes)}
+    return jax.make_mesh(shape, axes, devices=devices, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) ("data","model") single pod = 256 chips;
     multi_pod -> (2,16,16) ("pod","data","model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh((data, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_serving_mesh(n_devices: int | None = None):
+    """Pure data-parallel serving mesh: all (or the first `n_devices`)
+    local devices on one "data" axis — the vision engine's batch DP mesh.
+    Works degenerate on 1 CPU device and scales to a full host of chips."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return _make_mesh((len(devs),), ("data",), devices=devs)

@@ -15,7 +15,6 @@ mesh construction is identical in both modes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

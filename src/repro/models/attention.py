@@ -11,7 +11,6 @@ Decode KV caches shard head_dim over model (always divisible: 64/128).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

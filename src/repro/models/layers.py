@@ -5,8 +5,6 @@ of logical-axis-name tuples consumed by distributed.sharding.specs_from_axes.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -86,7 +86,6 @@ def _selective_scan(u, dt, Bc, Cc, A, D, *, state=None):
 def mamba_block(x, p, cfg, *, state=None):
     """x (B,T,d) -> (out, new_state). state = {"conv": (B,3,d_in), "ssm": (B,d_in,N)}."""
     B, T, d = x.shape
-    d_in = 2 * d
     dt_rank = max(1, d // DT_RANK_DIV)
     st_conv = None if state is None else state["conv"]
     st_ssm = None if state is None else state["ssm"]

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models import layers, scan_utils
+from repro.models import scan_utils
 
 LORA_RANK = 32
 

@@ -11,10 +11,8 @@ upcasts *inside* the chunk, halving the stacked-input footprint.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 
 def chunked_scan(step, init_state, xs, *, chunk: int = 128):

@@ -13,8 +13,6 @@ Entry points (all pure functions of (cfg, params, ...)):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -7,13 +7,12 @@ follows param_dtype: f32 for <=100B-param configs, bf16 for the giants
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim import AdamConfig, adam_init, adam_update
+from repro.optim import AdamConfig, adam_update
 
 
 def make_train_step(model, optim_cfg: AdamConfig,

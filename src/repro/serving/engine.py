@@ -12,8 +12,6 @@ produced by core.ptq.quantize_tree and the engine dequantizes weights on-use
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np

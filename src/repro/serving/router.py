@@ -1,0 +1,274 @@
+"""Replica router: fleet-level serving over N vision engines.
+
+The survey line of FPGA accelerator work (Guo et al.; ZynqNet) scales
+throughput by REPLICATING the compute unit and partitioning the data path;
+`VisionEngine` already scales one step across a mesh, and this module adds
+the second axis: a router that owns several engines ("replicas" — distinct
+backends, devices, or mesh slices), dispatches each incoming request to the
+least-loaded healthy replica, drains all replicas concurrently, and
+aggregates per-replica stats into fleet-level throughput and latency
+percentiles.
+
+Dispatch is deferred: `submit()` assigns a request to a replica's pending
+lane immediately (so queue depths — the load signal — are visible), but the
+images only enter the engine's own queue inside `run()`.  That makes
+failover clean: if a replica dies mid-drain (its jitted step raises), the
+router collects whatever that engine already completed, re-dispatches the
+unserved remainder across the survivors (re-arming drained survivors via
+`VisionEngine.reopen`), and only raises if NO replica is left healthy.  One
+bad backend never poisons the fleet.
+
+Usage:
+
+    router = ReplicaRouter.from_backends(params, ["pallas", "fixed_pallas"])
+    uids = [router.submit(img) for img in images]
+    router.run()                       # concurrent drain + failover
+    res = router.results()             # uid -> RoutedResult
+    print(router.stats())              # fleet + per-replica
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.serving.vision_engine import (VisionEngine, VisionResult,
+                                         latency_stats)
+
+
+class FleetExhaustedError(RuntimeError):
+    """Every replica failed: there is nobody left to serve the remainder."""
+
+
+@dataclasses.dataclass
+class RoutedResult:
+    """One served request as the ROUTER's client sees it: global uid,
+    which replica served it, and latency measured from router submit (queue
+    wait in the router's pending lane included)."""
+    uid: int
+    replica: int
+    pred: int
+    scores: np.ndarray
+    t_submit: float                   # router-side submit time
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class _Pending:
+    uid: int
+    image: np.ndarray
+    t_submit: float
+
+
+class ReplicaRouter:
+    """Least-loaded request router over a fleet of `VisionEngine` replicas."""
+
+    POLICIES = ("least_loaded", "round_robin")
+
+    def __init__(self, replicas: Sequence[VisionEngine], *,
+                 policy: str = "least_loaded"):
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {self.POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self._pending: list[list[_Pending]] = [[] for _ in self.replicas]
+        self._errors: dict[int, BaseException] = {}
+        self._results: dict[int, RoutedResult] = {}
+        self._assignment: dict[int, int] = {}      # uid -> replica index
+        self._next_uid = 0
+        self._rr_clock = 0
+        # reentrant: _pick (under the submit lock) reads queue_depths, which
+        # locks again for its own public callers
+        self._lock = threading.RLock()
+
+    @classmethod
+    def from_backends(cls, params: Any, backends: Iterable[str], *,
+                      batch_size: int = 32, mesh: Any = None,
+                      warmup: bool = True, policy: str = "least_loaded",
+                      **engine_kw) -> "ReplicaRouter":
+        """Build one replica per backend name over shared float params (each
+        engine quantizes its own copy — the paper's per-substrate bake)."""
+        return cls([VisionEngine(params, backend=b, batch_size=batch_size,
+                                 mesh=mesh, warmup=warmup, **engine_kw)
+                    for b in backends], policy=policy)
+
+    # -- request side -------------------------------------------------------
+
+    def healthy_replicas(self) -> list[int]:
+        # snapshot under the GIL; callers needing consistency vs concurrent
+        # drains hold self._lock (as _pick/run/_redistribute do)
+        errors = set(self._errors)
+        return [i for i in range(len(self.replicas)) if i not in errors]
+
+    def queue_depths(self) -> list[int]:
+        """Per-replica load: router pending lane + engine's own queue."""
+        with self._lock:
+            return [len(self._pending[i]) + self.replicas[i].queue_depth()
+                    for i in range(len(self.replicas))]
+
+    def _pick(self) -> int:
+        healthy = self.healthy_replicas()
+        if not healthy:
+            raise FleetExhaustedError(
+                f"all {len(self.replicas)} replicas have failed: "
+                f"{ {i: repr(e) for i, e in self._errors.items()} }")
+        if self.policy == "round_robin":
+            i = healthy[self._rr_clock % len(healthy)]
+            self._rr_clock += 1
+            return i
+        depths = self.queue_depths()
+        return min(healthy, key=lambda i: depths[i])
+
+    def submit(self, image: np.ndarray) -> int:
+        """Route one image to the least-loaded healthy replica; returns a
+        fleet-global uid immediately."""
+        with self._lock:
+            i = self._pick()
+            uid = self._next_uid
+            self._next_uid += 1
+            self._assignment[uid] = i
+            self._pending[i].append(_Pending(
+                uid=uid, image=np.asarray(image, np.float32),
+                t_submit=time.perf_counter()))
+            return uid
+
+    def submit_many(self, images: Iterable[np.ndarray]) -> list[int]:
+        return [self.submit(img) for img in images]
+
+    # -- serving side -------------------------------------------------------
+
+    def _drain_replica(self, i: int) -> list[_Pending]:
+        """Feed replica i its pending lane and drain it.  Returns the
+        requests that did NOT complete (empty when healthy); on failure the
+        replica is marked dead and partial results are still harvested."""
+        eng = self.replicas[i]
+        with self._lock:              # vs concurrent submit() to this lane
+            lane, self._pending[i] = self._pending[i], []
+        if not lane:
+            return []
+        local: dict[int, _Pending] = {}
+        res: dict[int, VisionResult] = {}
+        error: BaseException | None = None
+        try:
+            if eng.drained:
+                eng.reopen()          # failover onto a finished survivor
+            for p in lane:
+                local[eng.submit(p.image)] = p
+            eng.run()
+            res = eng.results()
+        except Exception as e:        # noqa: BLE001 — any replica fault fails over
+            error = e
+            try:
+                res = eng.results()   # harvest whatever completed pre-fault
+            except Exception:
+                res = {}
+        done: set[int] = set()
+        routed = {}
+        for luid, p in local.items():
+            r = res.get(luid)
+            if r is None:
+                continue
+            routed[p.uid] = RoutedResult(
+                uid=p.uid, replica=i, pred=r.pred, scores=r.scores,
+                t_submit=p.t_submit, t_done=r.t_done)
+            done.add(p.uid)
+        with self._lock:
+            self._results.update(routed)
+            if error is not None:
+                self._errors[i] = error
+        # unserved from the LANE (not the submitted map): a fault inside
+        # eng.submit itself must not drop the never-submitted remainder
+        return [p for p in lane if p.uid not in done]
+
+    def run(self) -> int:
+        """Drain every replica concurrently; fail unserved requests over to
+        survivors until everything is served or the fleet is exhausted.
+        Returns total #requests served this call."""
+        served_before = len(self._results)
+        while True:
+            with self._lock:
+                # reclaim lanes stranded on dead replicas: a concurrent
+                # submit() can route to a replica in the window before its
+                # fault is recorded — those requests must fail over too,
+                # not sit invisible on a lane nothing will ever drain
+                stranded = []
+                for i in self._errors:
+                    if self._pending[i]:
+                        stranded.extend(self._pending[i])
+                        self._pending[i] = []
+                self._redistribute(stranded)
+                busy = [i for i in self.healthy_replicas() if self._pending[i]]
+            if not busy:
+                break
+            with ThreadPoolExecutor(max_workers=len(busy)) as pool:
+                unserved_lists = list(pool.map(self._drain_replica, busy))
+            unserved = [p for lane in unserved_lists for p in lane]
+            if not unserved:
+                continue              # loop once more in case of re-routes
+            with self._lock:
+                self._redistribute(unserved)
+        return len(self._results) - served_before
+
+    def _redistribute(self, orphans: list[_Pending]) -> None:
+        """Spread failed-over requests across the survivors, shallowest lane
+        first.  Caller holds self._lock."""
+        if not orphans:
+            return
+        healthy = self.healthy_replicas()
+        if not healthy:
+            raise FleetExhaustedError(
+                f"{len(orphans)} requests unserved and every replica "
+                f"failed: { {i: repr(e) for i, e in self._errors.items()} }")
+        for p in orphans:
+            i = min(healthy, key=lambda j: len(self._pending[j]))
+            self._assignment[p.uid] = i
+            self._pending[i].append(p)
+
+    def serve(self, images: Iterable[np.ndarray]) -> list[RoutedResult]:
+        """Submit a workload, drain the fleet, return results in submission
+        order."""
+        uids = self.submit_many(images)
+        self.run()
+        return [self._results[u] for u in uids]
+
+    # -- reporting ----------------------------------------------------------
+
+    def results(self) -> dict[int, RoutedResult]:
+        with self._lock:
+            return dict(self._results)
+
+    def errors(self) -> dict[int, BaseException]:
+        with self._lock:
+            return dict(self._errors)
+
+    def stats(self) -> dict:
+        """Fleet-level latency/throughput + the per-replica engine stats."""
+        with self._lock:
+            res = list(self._results.values())
+            failed = sorted(self._errors)
+        per_replica = [eng.stats() for eng in self.replicas]
+        out = {
+            "replicas": len(self.replicas),
+            "healthy": len(self.replicas) - len(failed),
+            "failed": failed,
+            "policy": self.policy,
+            "n": len(res),
+            "per_replica": per_replica,
+            "served_by": {i: sum(1 for r in res if r.replica == i)
+                          for i in range(len(self.replicas))},
+        }
+        if not res:
+            return out
+        wall = max(r.t_done for r in res) - min(r.t_submit for r in res)
+        out.update(latency_stats([r.latency_s for r in res], wall))
+        return out

@@ -8,6 +8,21 @@ recompilation churn — the FIFO depth is the batch size), runs one jitted
 step of `smallnet.apply` on any registered backend, and streams per-request
 results back with latency accounting.
 
+Pass a `jax.sharding.Mesh` and the jitted step shards the batch dim across
+the mesh's data axes (the vision rules preset in `distributed/sharding.py`):
+inputs/outputs carry a `NamedSharding`, the padded batch size is rounded up
+to a multiple of the mesh batch axes, and on 1 device the whole thing
+degenerates to the unsharded program — same engine code on a laptop CPU and
+a pod slice.  For scaling across *separate* engines (distinct backends or
+mesh slices) see `serving/router.py`.
+
+Lifecycle: `submit()`/`step()` interleave freely; `run()` drains the queue
+and CLOSES the intake — a submit after the drain raises `EngineDrainedError`
+instead of silently queueing a request nothing will ever serve (the stats
+window is also frozen at drain time).  `reopen()` explicitly re-arms the
+engine for another serving wave (the replica router uses this to fail
+requests over onto survivors).
+
 Sibling of `serving/engine.py` (the LM continuous-batching engine); this one
 is the image-classification half of the serving story.
 
@@ -22,6 +37,7 @@ Usage:
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Iterable
@@ -29,9 +45,31 @@ from typing import Any, Iterable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import backends as B
 from repro.core import smallnet
+from repro.distributed import sharding as shd
+
+
+def latency_stats(latencies_s, wall_s: float) -> dict:
+    """The shared latency/throughput block of engine AND fleet stats():
+    mean/p50/p95/max in ms + wall-clock qps over `wall_s` seconds."""
+    lat = np.asarray(latencies_s)
+    return {
+        "latency_mean_ms": float(lat.mean() * 1e3),
+        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
+        "latency_max_ms": float(lat.max() * 1e3),
+        "throughput_qps": float(len(lat) / wall_s) if wall_s > 0 else float("inf"),
+    }
+
+
+class EngineDrainedError(RuntimeError):
+    """submit() after run() has drained the queue: the serving wave is over
+    and nothing would ever serve the request.  Call `reopen()` (or build a
+    fresh engine) to start another wave."""
 
 
 @dataclasses.dataclass
@@ -64,33 +102,77 @@ class VisionEngine:
     a single XLA executable per engine), runs the jitted forward, and
     timestamps completions after `block_until_ready` so reported latency is
     honest wall clock.
+
+    With `mesh=` the step is traced under the vision sharding rules and the
+    batch axis is split across the mesh (batch_size is rounded UP to the
+    nearest multiple of the mesh batch axes so every device gets equal full
+    shards).  The ambient mesh context is part of jax's jit cache key on
+    the versions we support, so the engine re-enters it around every step.
     """
 
     def __init__(self, params: Any, *, backend: str | B.Backend = "ref",
                  batch_size: int = 32, image_shape=(28, 28, 1),
-                 warmup: bool = True):
+                 warmup: bool = True, mesh: Any = None):
         self.backend = B.get_backend(backend)
-        self.batch_size = int(batch_size)
         self.image_shape = tuple(image_shape)
+        self.mesh = mesh
+        self.batch_size = int(batch_size)
+        if mesh is not None:
+            mult = shd.vision_batch_multiple(mesh)
+            self.batch_size = -(-self.batch_size // mult) * mult  # ceil to mult
+            self._rules = shd.make_vision_rules(mesh)
+            batch_spec = self._rules["batch"]
+            self._in_sharding = NamedSharding(
+                mesh, P(batch_spec, *(None,) * len(self.image_shape)))
+            self._out_sharding = NamedSharding(mesh, P(batch_spec, None))
         # quantize once at engine build (the paper bakes weights at synthesis)
         self.params = self.backend.prepare_params(params)
-        be = self.backend
-        self._step_fn = jax.jit(lambda p, x: smallnet.apply(p, x, backend=be))
+        self._step_fn = self._build_step()
         self._queue: collections.deque[VisionRequest] = collections.deque()
         self._results: dict[int, VisionResult] = {}
         self._next_uid = 0
         self._batches_run = 0
         self._padded_slots = 0
+        self._drained = False
         self._t_first_submit: float | None = None
         self._t_last_done: float | None = None
         if warmup:                    # compile outside the serving clock
             zeros = jnp.zeros((self.batch_size,) + self.image_shape, jnp.float32)
-            self._step_fn(self.params, zeros).block_until_ready()
+            with self._mesh_ctx():
+                self._step_fn(self.params, zeros).block_until_ready()
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _build_step(self):
+        be = self.backend
+        if self.mesh is None:
+            return jax.jit(lambda p, x: smallnet.apply(p, x, backend=be))
+        rules = self._rules
+
+        def fwd(p, x):
+            # the rules context is live during TRACE, which is when the
+            # logical->physical constraint specs are resolved
+            with shd.sharding_rules(rules):
+                return smallnet.apply(p, x, backend=be)
+
+        # params replicated (510 params ~ 2 KB; a pytree-prefix sharding
+        # broadcasts to every leaf), batch split across the mesh data axes
+        return jax.jit(fwd,
+                       in_shardings=(NamedSharding(self.mesh, P()),
+                                     self._in_sharding),
+                       out_shardings=self._out_sharding)
 
     # -- request side -------------------------------------------------------
 
     def submit(self, image: np.ndarray) -> int:
         """Queue one image; returns its uid immediately (async)."""
+        if self._drained:
+            raise EngineDrainedError(
+                f"VisionEngine(backend={self.backend.name!r}) has drained: "
+                "run() already completed this serving wave, so this request "
+                "would queue forever.  Call reopen() for another wave or "
+                "build a fresh engine.")
         img = np.asarray(image, np.float32).reshape(self.image_shape)
         uid = self._next_uid
         self._next_uid += 1
@@ -115,8 +197,9 @@ class VisionEngine:
         batch = np.zeros((self.batch_size,) + self.image_shape, np.float32)
         for i, r in enumerate(reqs):
             batch[i] = r.image
-        scores = self._step_fn(self.params, jnp.asarray(batch))
-        scores.block_until_ready()
+        with self._mesh_ctx():
+            scores = self._step_fn(self.params, jnp.asarray(batch))
+            scores.block_until_ready()
         t_done = time.perf_counter()
         self._t_last_done = t_done
         preds = np.asarray(smallnet.predict(scores))
@@ -131,11 +214,25 @@ class VisionEngine:
         return len(reqs)
 
     def run(self) -> int:
-        """Drain the queue; returns total #requests served."""
+        """Drain the queue, then close the intake (see EngineDrainedError);
+        returns total #requests served."""
         served = 0
         while self._queue:
             served += self.step()
+        self._drained = True
         return served
+
+    def reopen(self) -> None:
+        """Re-arm a drained engine for another serving wave (results and
+        stats accumulate across waves)."""
+        self._drained = False
+
+    @property
+    def drained(self) -> bool:
+        return self._drained
+
+    def queue_depth(self) -> int:
+        return len(self._queue)
 
     def serve(self, images: Iterable[np.ndarray]) -> list[VisionResult]:
         """Convenience: submit a workload, drain it, return results in
@@ -154,7 +251,6 @@ class VisionEngine:
         res = list(self._results.values())
         if not res:
             return {"backend": self.backend.name, "n": 0}
-        lat = np.array([r.latency_s for r in res])
         wall = (self._t_last_done or 0.0) - (self._t_first_submit or 0.0)
         return {
             "backend": self.backend.name,
@@ -162,9 +258,6 @@ class VisionEngine:
             "batch_size": self.batch_size,
             "batches": self._batches_run,
             "padded_slots": self._padded_slots,
-            "latency_mean_ms": float(lat.mean() * 1e3),
-            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
-            "latency_max_ms": float(lat.max() * 1e3),
-            "throughput_qps": float(len(res) / wall) if wall > 0 else float("inf"),
+            "mesh_devices": int(self.mesh.devices.size) if self.mesh is not None else 1,
+            **latency_stats([r.latency_s for r in res], wall),
         }

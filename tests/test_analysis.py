@@ -1,8 +1,6 @@
 """Roofline/HLO-parser correctness: loop multipliers, dot flops, collectives."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.analysis.hlo_parse import analyze_hlo
 from repro.analysis.roofline import (analytic_bytes, model_flops, param_count)

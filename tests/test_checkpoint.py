@@ -1,8 +1,6 @@
 """Fault tolerance: atomic checkpoints, bitwise restart, corruption
 detection, retention, elastic (cross-mesh) restore."""
-import dataclasses
 import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +62,6 @@ def test_restart_bitwise_identical(tmp_path):
     resulting parameters must be bitwise identical (deterministic data +
     exact checkpoint)."""
     cfg = get_config("granite-3-2b").smoke()
-    tc = dataclasses.replace if False else None
     base = dict(total_steps=4, seq_len=32, global_batch=4, ckpt_every=2,
                 log_every=100)
     t_full = Trainer(cfg, TrainerConfig(**base))

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import (AdamConfig, adam_init, adam_update,
                          clip_by_global_norm, cosine_schedule)

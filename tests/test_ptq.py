@@ -4,7 +4,6 @@ import pytest
 hp = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
-import jax
 import jax.numpy as jnp
 import numpy as np
 

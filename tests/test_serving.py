@@ -76,7 +76,9 @@ def test_int8_quanttensor_serving_direct(setup, rng):
 # ---------------------------------------------------------------------------
 
 from repro.core import smallnet
-from repro.serving.vision_engine import VisionEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.router import FleetExhaustedError, ReplicaRouter
+from repro.serving.vision_engine import EngineDrainedError, VisionEngine
 
 
 @pytest.fixture(scope="module")
@@ -153,3 +155,203 @@ def test_vision_engine_fixed_pallas_serves_bit_exact_words(vision_setup):
     np.testing.assert_array_equal(np.stack([r.scores for r in res_k]),
                                   np.stack([r.scores for r in res_e]))
     assert [r.pred for r in res_k] == [r.pred for r in res_e]
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: run() closes the intake (regression for silent dangling
+# submits after the drain)
+# ---------------------------------------------------------------------------
+
+
+def test_vision_engine_submit_after_drain_raises(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+    eng.submit_many(list(images[:6]))
+    assert eng.run() == 6 and eng.drained
+    with pytest.raises(EngineDrainedError):
+        eng.submit(images[0])
+    with pytest.raises(EngineDrainedError):          # serve() submits too
+        eng.serve(list(images[:2]))
+    assert len(eng.results()) == 6                   # nothing mis-batched
+
+
+def test_vision_engine_reopen_starts_new_wave(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+    eng.serve(list(images[:4]))
+    eng.reopen()
+    assert not eng.drained
+    res = eng.serve(list(images[4:7]))               # second wave works
+    assert [r.uid for r in res] == [4, 5, 6]
+    assert len(eng.results()) == 7                   # waves accumulate
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded engine: the jitted step splits the batch over the serving mesh
+# (degenerate 1-device mesh here; the multi-device case runs in a subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_vision_engine_sharded_serves_identical_words(vision_setup):
+    """A mesh-sharded fixed-point engine must serve the exact int32 score
+    words of the unsharded engine (sharding only partitions, never rounds)."""
+    params, images = vision_setup
+    mesh = make_serving_mesh()
+    res_m = VisionEngine(params, backend="fixed", batch_size=8,
+                         mesh=mesh).serve(list(images[:20]))
+    res_u = VisionEngine(params, backend="fixed",
+                         batch_size=8).serve(list(images[:20]))
+    np.testing.assert_array_equal(np.stack([r.scores for r in res_m]),
+                                  np.stack([r.scores for r in res_u]))
+    assert [r.pred for r in res_m] == [r.pred for r in res_u]
+
+
+def test_vision_engine_sharded_multi_device_subprocess(vision_setup):
+    """8 virtual CPU devices: the engine rounds its batch to the mesh
+    multiple, serves a ragged workload, and matches the unsharded engine
+    word-for-word. Runs in a subprocess so the 1-device default of the rest
+    of the suite is untouched."""
+    import subprocess
+    import sys
+    import textwrap
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, numpy as np
+        from repro.core import smallnet
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.vision_engine import VisionEngine
+
+        params = smallnet.init_params(jax.random.key(0))
+        imgs = np.random.default_rng(0).uniform(
+            0, 1, (19, 28, 28, 1)).astype(np.float32)
+        mesh = make_serving_mesh()
+        assert shd.vision_batch_multiple(mesh) == 8
+        eng = VisionEngine(params, backend="fixed", batch_size=6, mesh=mesh)
+        assert eng.batch_size == 8          # 6 rounded UP to the mesh multiple
+        res = eng.serve(list(imgs))
+        base = VisionEngine(params, backend="fixed",
+                            batch_size=8).serve(list(imgs))
+        ok = (len(res) == 19
+              and all((a.scores == b.scores).all() and a.pred == b.pred
+                      for a, b in zip(res, base))
+              and eng.stats()["mesh_devices"] == 8)
+        print(json.dumps({"ok": bool(ok)}))
+    """)
+    import os
+    import pathlib
+    src = str(pathlib.Path(__file__).parents[1] / "src")
+    env = dict(os.environ,
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=560, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    import json as _json
+    assert _json.loads(r.stdout.strip().splitlines()[-1])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# Replica router: least-loaded dispatch, failover isolation, fleet stats
+# ---------------------------------------------------------------------------
+
+
+def test_router_two_replicas_per_request_correct(vision_setup):
+    """>= 2 replicas drive a workload to completion and every request's
+    scores match a direct apply on the backend that served it."""
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "fixed"],
+                                         batch_size=8, warmup=False)
+    res = router.serve(list(images[:30]))
+    assert len(res) == 30
+    assert [r.uid for r in res] == list(range(30))
+    names = [eng.backend.name for eng in router.replicas]
+    direct = {n: np.asarray(smallnet.apply(params, jnp.asarray(images[:30]),
+                                           backend=n)) for n in set(names)}
+    for i, r in enumerate(res):
+        want = direct[names[r.replica]][i]
+        np.testing.assert_allclose(r.scores, want, rtol=1e-6, atol=1e-6)
+        assert r.pred == int(np.argmax(want))
+    s = router.stats()
+    assert s["n"] == 30 and s["healthy"] == 2 and s["failed"] == []
+    assert all(v > 0 for v in s["served_by"].values())   # both replicas worked
+
+
+def test_router_least_loaded_dispatch(vision_setup):
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "ref", "ref"],
+                                         batch_size=8, warmup=False)
+    router.submit_many(list(images[:9]))
+    assert router.queue_depths() == [3, 3, 3]            # balanced lanes
+    # a pre-loaded replica is avoided until the others catch up
+    router2 = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                          batch_size=8, warmup=False)
+    router2._pending[0] = [None] * 5                     # simulate deep lane
+    assigned = [router2._assignment[router2.submit(images[0])]
+                for _ in range(5)]
+    assert assigned == [1, 1, 1, 1, 1]
+
+
+def test_router_replica_failure_is_isolated(vision_setup):
+    """One replica whose jitted step faults mid-drain must not poison the
+    fleet: its requests fail over to the survivor and all complete."""
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                         batch_size=8, warmup=False)
+
+    def faulting_step(p, x):
+        raise RuntimeError("replica hardware fault")
+
+    router.replicas[0]._step_fn = faulting_step
+    uids = router.submit_many(list(images[:20]))
+    assert router.run() == 20
+    assert set(router.results()) == set(uids)
+    s = router.stats()
+    assert s["failed"] == [0] and s["healthy"] == 1
+    assert s["served_by"] == {0: 0, 1: 20}
+    assert isinstance(router.errors()[0], RuntimeError)
+    # post-fault submits route around the dead replica
+    assert router._assignment[router.submit(images[0])] == 1
+
+
+def test_router_reclaims_lane_stranded_on_dead_replica(vision_setup):
+    """Requests routed to a replica in the window before its fault is
+    recorded must fail over at the next run(), not sit on a lane nothing
+    drains."""
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                         batch_size=8, warmup=False)
+    uids = router.submit_many(list(images[:6]))          # balanced 3 / 3
+    router._errors[0] = RuntimeError("died before its drain")
+    assert router.run() == 6                             # all six served
+    assert set(router.results()) == set(uids)
+    assert router.stats()["served_by"] == {0: 0, 1: 6}
+
+
+def test_router_fleet_exhausted_raises(vision_setup):
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref"], batch_size=4,
+                                         warmup=False)
+    router.replicas[0]._step_fn = lambda p, x: (_ for _ in ()).throw(
+        RuntimeError("down"))
+    router.submit_many(list(images[:4]))
+    with pytest.raises(FleetExhaustedError):
+        router.run()
+
+
+def test_router_stats_aggregation(vision_setup):
+    """Fleet stats must reconcile with the per-replica engine stats and the
+    routed results (latency from ROUTER submit, so >= engine latency)."""
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "plan"],
+                                         batch_size=8, warmup=False)
+    res = router.serve(list(images[:24]))
+    s = router.stats()
+    assert s["n"] == 24 == sum(s["served_by"].values())
+    assert sum(p["n"] for p in s["per_replica"]) == 24
+    assert s["latency_p95_ms"] >= s["latency_p50_ms"] > 0
+    assert s["latency_max_ms"] >= max(r.latency_s for r in res) * 1e3 * (1 - 1e-9)
+    assert s["throughput_qps"] > 0
+    per_backend = {p["backend"]: p["n"] for p in s["per_replica"]}
+    assert per_backend == {"ref": s["served_by"][0], "plan": s["served_by"][1]}

@@ -29,7 +29,6 @@ def test_rules_divisibility_all_cells():
                     mesh_axes=axes, global_batch=s.global_batch,
                     n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                     decode=(s.kind == "decode"), seq_len=s.seq_len)
-                data_size = 32 if "pod" in axes else 16
                 if rules["batch"] == ("pod", "data"):
                     assert s.global_batch % 32 == 0
                 elif rules["batch"] == ("data",):

@@ -41,7 +41,10 @@ def test_accuracy_ladder(trained):
     # the paper's float->fixed drop was 5.4 points at 32-bit
     assert accs["fixed_q16_16"] >= accs["float32"] - 0.06
     assert accs["int8_ptq"] >= accs["float32"] - 0.06
-    assert accs["float32_plan_sigmoid"] >= accs["float32"] - 0.04
+    # the paper's own exact->PLAN drop was 5.44 points (93.47 -> 88.03), so
+    # a 4-point bound was stricter than the source hardware; allow the same
+    # few-points envelope as the other quantized paths
+    assert accs["float32_plan_sigmoid"] >= accs["float32"] - 0.06
 
 
 @pytest.mark.slow

@@ -4,15 +4,13 @@ The paper's pipeline at system level: train float (Keras analogue) ->
 extract + quantize -> deploy on the accelerator path -> validate accuracy
 and latency; plus the framework-level training loop with checkpointing.
 """
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import get_config
-from repro.core import deploy, ptq, smallnet
+from repro.core import deploy, smallnet
 from repro.runtime import fault
 from repro.runtime.trainer import Trainer, TrainerConfig
 

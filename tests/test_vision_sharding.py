@@ -1,0 +1,92 @@
+"""Vision-serving sharding rules (distributed/sharding.py preset).
+
+Acceptance for the mesh-sharded serving path: on a single CPU device,
+`smallnet.apply` under `make_vision_rules(mesh)` is numerically identical
+to the unsharded path for EVERY registered backend — exact int32 word
+equality for the fixed-point substrates, and bitwise float equality for the
+rest (a sharding constraint partitions, it never rounds).
+
+Unlike test_sharding.py (hypothesis-gated LM policy properties), this file
+runs on the bare tier-1 environment.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import backends, smallnet
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_serving_mesh
+
+BACKENDS = backends.list_backends()
+
+
+@pytest.fixture(scope="module")
+def setup(rng):
+    params = smallnet.init_params(jax.random.key(0))
+    # nonzero biases so bias handling is inside the parity check
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(jax.random.key(1), len(leaves))
+    params = jax.tree_util.tree_unflatten(treedef, [
+        p + 0.1 * jax.random.normal(k, p.shape, p.dtype)
+        for p, k in zip(leaves, keys)])
+    images = jnp.asarray(rng.uniform(0.0, 1.0, (9, 28, 28, 1)), jnp.float32)
+    return params, images
+
+
+def test_vision_rules_preset():
+    mesh = make_serving_mesh()
+    rules = shd.make_vision_rules(mesh)
+    assert rules["batch"] in ("data", ("data",), ("pod", "data"))
+    assert shd.vision_batch_axes(mesh) == ("data",)
+    assert shd.vision_batch_multiple(mesh) == mesh.devices.size
+    # everything except batch is replicated — smallNet's 510 params are tiny
+    assert all(v is None for k, v in rules.items() if k != "batch")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_apply_identical_to_unsharded(setup, backend):
+    params, images = setup
+    base = np.asarray(smallnet.apply(params, images, backend=backend))
+    mesh = make_serving_mesh()
+    with mesh, shd.sharding_rules(shd.make_vision_rules(mesh)):
+        shard = np.asarray(smallnet.apply(params, images, backend=backend))
+    # exact for every dtype — int32 words for fixed/fixed_pallas, bitwise
+    # floats for the rest: a sharding constraint partitions, it never rounds
+    np.testing.assert_array_equal(shard, base)
+
+
+@pytest.mark.parametrize("backend", ["ref", "fixed", "fixed_pallas"])
+def test_sharded_jitted_step_identical(setup, backend):
+    """The engine-shaped program: jit with NamedSharding-constrained in/out
+    and the rules live at trace time, compared against a plain jit."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    params, images = setup
+    be = backends.get_backend(backend)
+    p = be.prepare_params(params)
+    mesh = make_serving_mesh()
+    rules = shd.make_vision_rules(mesh)
+
+    def fwd(pp, x):
+        with shd.sharding_rules(rules):
+            return smallnet.apply(pp, x, backend=be)
+
+    with mesh:
+        sharded = jax.jit(
+            fwd,
+            in_shardings=(NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P(rules["batch"], None, None, None))),
+            out_shardings=NamedSharding(mesh, P(rules["batch"], None)))
+        got = np.asarray(sharded(p, images))
+    want = np.asarray(jax.jit(
+        lambda pp, x: smallnet.apply(pp, x, backend=be))(p, images))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_constrain_batch_noop_without_rules(setup):
+    params, images = setup
+    x = jnp.ones((4, 7, 7))
+    assert smallnet._constrain_batch(x) is x          # no rules -> identity
