@@ -84,7 +84,8 @@ def run(trained):
         s = eng.stats()
         rows.append((f"latency/engine_{name}", s["latency_mean_ms"] * 1e3,
                      f"p50={s['latency_p50_ms']:.2f}ms p95={s['latency_p95_ms']:.2f}ms "
-                     f"qps={s['throughput_qps']:.0f} n={s['n']} batch={s['batch_size']}"))
+                     f"qps={s['throughput_qps']:.0f} n={s['n']} batch={s['batch_size']} "
+                     f"occupancy={s['batch_occupancy']:.2f}"))
 
     # serving-topology sweep: the same 128-request workload through (a) one
     # engine, (b) one engine whose jitted step shards the batch across the

@@ -4,12 +4,13 @@ Handles SAME padding (Keras even-kernel convention: 0 before, 1 after),
 stride, the fused activation epilogue, and the VMEM-budget check for the
 whole-image blocking strategy.
 
-Stride limitation (documented): the kernel always computes the FULL stride-1
-output and decimates it afterwards (`y[:, ::stride, ::stride]`).  That is
-exact, and cheap for this model family's small strides, but the work (and
-the VMEM) for the discarded rows/columns is still spent — so the VMEM
-budget check accounts for the PRE-decimation output block, not the smaller
-strided result.  A natively-strided kernel is future work (see ROADMAP).
+Stride is NATIVE: each kernel tap keeps only every stride-th row/column
+before its MXU dot, so the accumulator, the MAC work, and the VMEM output
+block all cover just the kept pixels — the full stride-1 grid is never
+materialized.  The VMEM budget therefore checks padded input + STRIDED
+output, which is what lets coarse-stride sweeps over frame-sized inputs
+(512x512 and up) run at all.  Identical values to decimating a stride-1
+output, since each output pixel's MAC is independent.
 """
 from __future__ import annotations
 
@@ -43,18 +44,16 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
     elif padding != "VALID":
         raise ValueError(padding)
     B, Hp, Wp, _ = x.shape
-    # Pre-decimation output block: the kernel materializes the full stride-1
-    # result in VMEM even when stride > 1 (see module docstring), so that is
-    # what must fit alongside the padded input block.
+    # Strided output block: the kernel MACs only the kept rows/columns (see
+    # module docstring), so the VMEM check is padded input + strided output.
     H1, W1 = Hp - kh + 1, Wp - kw + 1
-    vmem = (Hp * Wp * cin + H1 * W1 * cout) * 4
+    Hs, Ws = -(-H1 // stride), -(-W1 // stride)
+    vmem = (Hp * Wp * cin + Hs * Ws * cout) * 4
     if vmem > _VMEM_BUDGET:
         raise ValueError(
             f"image block exceeds VMEM budget: {vmem} B "
-            f"(input {Hp}x{Wp}x{cin} + pre-decimation output {H1}x{W1}x{cout})")
-    y = conv2d_pallas(x.astype(jnp.float32), w.astype(jnp.float32),
-                      b.astype(jnp.float32), apply_sigmoid=apply_sigmoid,
-                      activation=activation, interpret=interpret)
-    if stride > 1:
-        y = y[:, ::stride, ::stride, :]          # output decimation
-    return y
+            f"(input {Hp}x{Wp}x{cin} + strided output {Hs}x{Ws}x{cout})")
+    return conv2d_pallas(x.astype(jnp.float32), w.astype(jnp.float32),
+                         b.astype(jnp.float32), stride=stride,
+                         apply_sigmoid=apply_sigmoid,
+                         activation=activation, interpret=interpret)

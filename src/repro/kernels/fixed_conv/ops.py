@@ -1,8 +1,10 @@
 """jit'd public wrappers for the fused fixed-point Pallas pipeline.
 
 Handles SAME padding (Keras even-kernel convention: 0 before, 1 after),
-stride (output decimation, mirroring kernels/conv2d's documented
-limitation: the VMEM budget accounts for the PRE-decimation block), the
+stride (output decimation — unlike the float kernels/conv2d, which realizes
+stride natively, this path still decimates a stride-1 output and budgets
+VMEM for the PRE-decimation block; smallNet's fixed pipeline uses the fused
+pool, not strides, so the wasted work is zero on the deployed graph), the
 optional fused PLAN + maxpool epilogues, and scalar/word-shape plumbing.
 
 `FixedPointConfig` is a frozen dataclass, so it rides through `jax.jit` as a

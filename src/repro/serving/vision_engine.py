@@ -252,12 +252,17 @@ class VisionEngine:
         if not res:
             return {"backend": self.backend.name, "n": 0}
         wall = (self._t_last_done or 0.0) - (self._t_first_submit or 0.0)
+        slots = self._batches_run * self.batch_size
         return {
             "backend": self.backend.name,
             "n": len(res),
             "batch_size": self.batch_size,
             "batches": self._batches_run,
             "padded_slots": self._padded_slots,
+            # real images / total slots across every step: the fraction of
+            # compute spent on real work vs zero padding (stream benchmarks
+            # report this as pad waste)
+            "batch_occupancy": (slots - self._padded_slots) / slots if slots else 0.0,
             "mesh_devices": int(self.mesh.devices.size) if self.mesh is not None else 1,
             **latency_stats([r.latency_s for r in res], wall),
         }

@@ -1,0 +1,15 @@
+"""Real-time streaming vision: frame sources -> sliding-window tiler ->
+deadline-scheduled inference pipeline over the serving stack.
+
+The paper targets "real time, resource-constrained embedded applications" —
+pixels stream from the PS into the fabric at frame rate, not as pre-cropped
+batches.  This package is that workload: synthetic video sources with
+ground-truth tracks (`sources`), a sliding-window 28x28 tiler that turns the
+classifier into a full-frame detector (`tiler`), and an asyncio pipeline
+with bounded queues, backpressure, and per-frame deadlines (`pipeline`) that
+infers through any `VisionEngine` / `ReplicaRouter` topology.
+"""
+from repro.streaming.pipeline import StreamConfig, StreamingPipeline  # noqa: F401
+from repro.streaming.sources import (Frame, PacedPlayer,  # noqa: F401
+                                     SyntheticVideoSource)
+from repro.streaming.tiler import Detection, Tiler  # noqa: F401

@@ -1,0 +1,290 @@
+"""Deadline-scheduled asyncio pipeline: ingest -> tile -> infer -> aggregate.
+
+The paper's deployment is a free-running pipeline: the camera does not wait
+for the fabric, so a slow stage means dropped frames, not unbounded queues.
+This module reproduces that discipline over the serving stack:
+
+  ingest     pulls frames from a source (a `PacedPlayer` for real-time, any
+             `FrameSource` for max-throughput runs) and admits them to a
+             BOUNDED queue.  Real-time mode never blocks the camera: a full
+             queue triggers the explicit drop policy ("newest" refuses the
+             arriving frame, "oldest" evicts the stalest queued frame).
+             Throughput mode blocks instead — backpressure propagates to
+             the source and nothing drops.
+  tile       sliding-window extraction (`streaming/tiler.py`).
+  infer      one batched wave through a `VisionEngine` or `ReplicaRouter`
+             (any object with `serve()`/`stats()`), run in a worker thread
+             so the event loop keeps ingesting on schedule.
+  aggregate  confidence thresholding + dedup -> `FrameResult`.
+
+Every frame's age is checked against the per-frame deadline at each stage
+boundary; a miss is COUNTED (reason + stage), never silently lost — the
+accounting invariant `frames_in == served + dropped` is part of `stats()`
+and asserted by the CI smoke.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.streaming.sources import Frame, PacedPlayer
+from repro.streaming.tiler import Detection, Tiler
+
+_SENTINEL = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Pipeline scheduling knobs.
+
+    `deadline_ms=None` disables deadline drops (sensible for throughput
+    runs); `realtime=None` auto-detects — a `PacedPlayer` with a target FPS
+    streams in real time (drop policy active), anything else is a
+    throughput run (ingest blocks, backpressure reaches the source).
+    """
+    deadline_ms: float | None = None
+    queue_size: int = 4
+    drop_policy: str = "newest"            # or "oldest"
+    realtime: bool | None = None
+
+    def __post_init__(self):
+        if self.drop_policy not in ("newest", "oldest"):
+            raise ValueError(f"unknown drop_policy {self.drop_policy!r}")
+        if self.queue_size < 1:
+            raise ValueError("queue_size must be >= 1")
+
+
+@dataclasses.dataclass
+class _Item:
+    frame: Frame
+    t_ingest: float
+    tiles: np.ndarray | None = None
+    positions: list | None = None
+    scores: np.ndarray | None = None
+    stage_s: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class FrameResult:
+    """One served frame as the pipeline's client sees it."""
+    index: int
+    detections: list[Detection]
+    t_source: float
+    t_ingest: float
+    t_done: float
+    stage_s: dict
+
+    @property
+    def latency_s(self) -> float:
+        """Ingest-to-detections wall clock (what the consumer observes)."""
+        return self.t_done - self.t_ingest
+
+
+class StreamingPipeline:
+    """Frames -> detections through bounded, deadline-checked stages."""
+
+    def __init__(self, source: Any, engine: Any, tiler: Tiler | None = None,
+                 *, config: StreamConfig = StreamConfig()):
+        self.source = source
+        self.engine = engine
+        self.tiler = tiler if tiler is not None else Tiler()
+        self.config = config
+        if config.realtime is not None:
+            self.realtime = bool(config.realtime)
+        else:
+            self.realtime = bool(isinstance(source, PacedPlayer)
+                                 and source.fps)
+        self.results: list[FrameResult] = []
+        self._frames_in = 0
+        self._drops: dict[str, int] = {}           # "stage/reason" -> count
+        self._stage_s: dict[str, list[float]] = {"tile": [], "infer": [],
+                                                 "aggregate": []}
+        self._queue_hwm: dict[str, int] = {}
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    # -- accounting ---------------------------------------------------------
+
+    def _drop(self, stage: str, reason: str) -> None:
+        key = f"{stage}/{reason}"
+        self._drops[key] = self._drops.get(key, 0) + 1
+
+    def _expired(self, item: _Item, stage: str) -> bool:
+        dl = self.config.deadline_ms
+        if dl is None:
+            return False
+        if (time.perf_counter() - item.t_ingest) * 1e3 <= dl:
+            return False
+        self._drop(stage, "deadline")
+        return True
+
+    async def _admit(self, q: asyncio.Queue, name: str, item: _Item) -> None:
+        """Bounded-queue admission: block in throughput mode, apply the drop
+        policy in real-time mode (the camera never waits)."""
+        if not self.realtime:
+            await q.put(item)
+        else:
+            try:
+                q.put_nowait(item)
+            except asyncio.QueueFull:
+                if self.config.drop_policy == "oldest":
+                    q.get_nowait()                 # evict the stalest frame
+                    q.task_done()
+                    self._drop(name, "queue_full")
+                    q.put_nowait(item)
+                else:
+                    self._drop(name, "queue_full")
+                    return
+        self._queue_hwm[name] = max(self._queue_hwm.get(name, 0), q.qsize())
+
+    # -- stages -------------------------------------------------------------
+
+    async def _ingest(self, q_tile: asyncio.Queue) -> None:
+        if hasattr(self.source, "__aiter__"):
+            async for frame in self.source:
+                await self._take(q_tile, frame)
+        else:
+            for frame in self.source:
+                await self._take(q_tile, frame)
+                await asyncio.sleep(0)             # let stages run
+        await q_tile.put(_SENTINEL)
+
+    async def _take(self, q_tile: asyncio.Queue, frame: Frame) -> None:
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        self._frames_in += 1
+        await self._admit(q_tile, "ingest", _Item(frame=frame, t_ingest=now))
+
+    async def _tile_stage(self, q_tile: asyncio.Queue,
+                          q_infer: asyncio.Queue) -> None:
+        while True:
+            item = await q_tile.get()
+            if item is _SENTINEL:
+                await q_infer.put(_SENTINEL)
+                return
+            if self._expired(item, "tile"):
+                continue
+            t0 = time.perf_counter()
+            item.tiles, item.positions = self.tiler.extract(item.frame)
+            item.stage_s["tile"] = time.perf_counter() - t0
+            self._stage_s["tile"].append(item.stage_s["tile"])
+            await self._admit(q_infer, "tile", item)
+
+    def _serve_wave(self, tiles: np.ndarray) -> np.ndarray:
+        """One batched wave through the engine/router (worker thread)."""
+        eng = self.engine
+        if getattr(eng, "drained", False):
+            eng.reopen()                           # engines close after run()
+        res = eng.serve(list(tiles))
+        return np.stack([r.scores for r in res])
+
+    async def _infer_stage(self, q_infer: asyncio.Queue,
+                           q_agg: asyncio.Queue) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = await q_infer.get()
+            if item is _SENTINEL:
+                await q_agg.put(_SENTINEL)
+                return
+            if self._expired(item, "infer"):
+                continue
+            t0 = time.perf_counter()
+            item.scores = await loop.run_in_executor(
+                None, self._serve_wave, item.tiles)
+            item.stage_s["infer"] = time.perf_counter() - t0
+            self._stage_s["infer"].append(item.stage_s["infer"])
+            await self._admit(q_agg, "infer", item)
+
+    async def _agg_stage(self, q_agg: asyncio.Queue) -> None:
+        while True:
+            item = await q_agg.get()
+            if item is _SENTINEL:
+                return
+            if self._expired(item, "aggregate"):
+                continue
+            t0 = time.perf_counter()
+            dets = self.tiler.aggregate(item.scores, item.positions,
+                                        item.tiles)
+            t_done = time.perf_counter()
+            item.stage_s["aggregate"] = t_done - t0
+            self._stage_s["aggregate"].append(item.stage_s["aggregate"])
+            self._t_last = t_done
+            self.results.append(FrameResult(
+                index=item.frame.index, detections=dets,
+                t_source=item.frame.t_source, t_ingest=item.t_ingest,
+                t_done=t_done, stage_s=dict(item.stage_s)))
+
+    # -- driving ------------------------------------------------------------
+
+    async def arun(self) -> list[FrameResult]:
+        qs = self.config.queue_size
+        q_tile, q_infer, q_agg = (asyncio.Queue(maxsize=qs) for _ in range(3))
+        await asyncio.gather(self._ingest(q_tile),
+                             self._tile_stage(q_tile, q_infer),
+                             self._infer_stage(q_infer, q_agg),
+                             self._agg_stage(q_agg))
+        return self.results
+
+    def run(self) -> list[FrameResult]:
+        """Synchronous convenience: drive the whole clip to completion."""
+        return asyncio.run(self.arun())
+
+    # -- reporting ----------------------------------------------------------
+
+    @staticmethod
+    def _dist_ms(xs: list[float]) -> dict:
+        if not xs:
+            return {"n": 0}
+        a = np.asarray(xs) * 1e3
+        return {"n": len(xs), "mean_ms": float(a.mean()),
+                "p50_ms": float(np.percentile(a, 50)),
+                "p99_ms": float(np.percentile(a, 99)),
+                "max_ms": float(a.max())}
+
+    def stats(self) -> dict:
+        served = len(self.results)
+        dropped = sum(self._drops.values())
+        wall = ((self._t_last or 0.0) - (self._t_first or 0.0)
+                if served else 0.0)
+        by_reason: dict[str, int] = {}
+        for key, n in self._drops.items():
+            reason = key.split("/", 1)[1]
+            by_reason[reason] = by_reason.get(reason, 0) + n
+        out = {
+            "mode": "realtime" if self.realtime else "throughput",
+            "frames_in": self._frames_in,
+            "frames_served": served,
+            "frames_dropped": dropped,
+            "drop_rate": dropped / self._frames_in if self._frames_in else 0.0,
+            "drops_by_stage": dict(sorted(self._drops.items())),
+            "drops_by_reason": by_reason,
+            # the no-silent-loss invariant; CI smoke asserts it
+            "accounted": self._frames_in == served + dropped,
+            "sustained_fps": served / wall if wall > 0 else 0.0,
+            "detections_total": sum(len(r.detections) for r in self.results),
+            "queue_hwm": dict(self._queue_hwm),
+            "stage": {k: self._dist_ms(v) for k, v in self._stage_s.items()},
+            **{f"latency_{k}": v for k, v in self._dist_ms(
+                [r.latency_s for r in self.results]).items() if k != "n"},
+        }
+        if hasattr(self.engine, "stats"):
+            es = self.engine.stats()
+            out["engine"] = es
+            if "batch_occupancy" in es:
+                out["batch_occupancy"] = es["batch_occupancy"]
+            elif "per_replica" in es:
+                # exact fleet occupancy: total real images / total slots
+                # (NOT a mean of per-replica ratios, which overweights
+                # busy replicas)
+                slots = sum(r["batches"] * r["batch_size"]
+                            for r in es["per_replica"] if "batches" in r)
+                padded = sum(r["padded_slots"] for r in es["per_replica"]
+                             if "padded_slots" in r)
+                if slots:
+                    out["batch_occupancy"] = (slots - padded) / slots
+        return out

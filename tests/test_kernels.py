@@ -101,17 +101,32 @@ def test_conv2d_bad_activation_rejected():
         conv2d(x, w, activation="relu")
 
 
-def test_conv2d_stride2_vmem_budgets_pre_decimation_output():
-    """Strides are realized by output decimation AFTER a full stride-1 conv
-    (documented limitation): the VMEM check must therefore reject shapes
-    whose PRE-decimation output exceeds the budget, even when the strided
-    result would fit comfortably."""
+def test_conv2d_stride2_vmem_budgets_strided_output():
+    """Strides are realized NATIVELY (only kept rows/columns are MAC'd), so
+    the VMEM budget covers just the strided output: a shape whose stride-1
+    output would blow the budget fits comfortably at stride 2."""
     x = jnp.zeros((1, 512, 512, 1), jnp.float32)
     w = jnp.zeros((2, 2, 1, 16), jnp.float32)
-    # pre-decimation output 512*512*16*4 B ~= 16.8 MB > 14 MB budget;
-    # the stride-2 result would only be ~4.2 MB
-    with pytest.raises(ValueError, match="pre-decimation"):
-        conv2d(x, w, stride=2)
+    # stride-1 output 512*512*16*4 B ~= 16.8 MB > 14 MB budget...
+    with pytest.raises(ValueError, match="strided output"):
+        conv2d(x, w, stride=1)
+    # ...but the stride-2 output is only ~4.2 MB, so the SAME image now runs
+    y = conv2d(x, w, stride=2)
+    assert y.shape == (1, 256, 256, 16)
+
+
+def test_conv2d_stride2_large_frame_matches_ref(rng):
+    """The natively-strided kernel on a streaming-tiler-sized frame agrees
+    with the decimate-a-stride-1-output oracle."""
+    x = jnp.asarray(rng.normal(size=(1, 112, 112, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 1, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    for stride in (2, 3, 4):
+        got = conv2d(x, w, b, stride=stride)
+        want = conv2d_ref(x, w, b, stride=stride)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_conv2d_stride2_small_shape_still_exact(rng):

@@ -1,0 +1,246 @@
+"""Streaming subsystem: sources, tiler, and the deadline-scheduled pipeline.
+
+The load-bearing invariants: clips replay deterministically, the pipeline
+serves EXACTLY what the offline tiler computes, every frame is accounted
+(in == served + dropped, never silently lost), bounded queues stay bounded
+under a too-fast source, and the two fixed-point substrates produce
+bit-identical detections on a frozen clip.
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import smallnet
+from repro.serving.router import ReplicaRouter
+from repro.serving.vision_engine import VisionEngine
+from repro.streaming.pipeline import StreamConfig, StreamingPipeline
+from repro.streaming.sources import PacedPlayer, SyntheticVideoSource
+from repro.streaming.tiler import Tiler, tile_positions
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = smallnet.init_params(jax.random.key(0))
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    keys = jax.random.split(jax.random.key(1), len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        l + 0.1 * jax.random.normal(k, l.shape, l.dtype)
+        for l, k in zip(leaves, keys)])
+
+
+@pytest.fixture(scope="module")
+def clip():
+    return SyntheticVideoSource(n_frames=8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def tiler(params, clip):
+    """Threshold at the 80th pct of first-frame 'fixed' confidences, so the
+    frozen clip deterministically yields nonzero detections."""
+    t0 = Tiler(stride=14)
+    tiles, _ = t0.extract(clip.frames()[0])
+    conf = t0._confidences(t0.score(params, tiles, backend="fixed")).max(-1)
+    return Tiler(stride=14, threshold=float(np.quantile(conf, 0.8)))
+
+
+# ---------------------------------------------------------------------------
+# sources
+# ---------------------------------------------------------------------------
+
+def test_source_replays_identical_clip(clip):
+    a, b = clip.frames(), clip.frames()
+    assert len(a) == len(b) == 8
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(fa.pixels, fb.pixels)
+        assert fa.truth == fb.truth
+
+
+def test_source_tracks_stay_in_bounds_and_move(clip):
+    H, W = clip.frame_shape
+    frames = clip.frames()
+    for f in frames:
+        assert f.pixels.shape == (H, W, 1)
+        assert f.pixels.min() >= 0.0 and f.pixels.max() <= 1.0
+        for box in f.truth:
+            assert 0 <= box.y and box.y + box.h <= H
+            assert 0 <= box.x and box.x + box.w <= W
+    # the objects drift: at least one box center changes across the clip
+    c0 = [b.center for b in frames[0].truth]
+    cN = [b.center for b in frames[-1].truth]
+    assert c0 != cN
+
+
+# ---------------------------------------------------------------------------
+# tiler
+# ---------------------------------------------------------------------------
+
+def test_tile_positions_cover_frame():
+    pos = tile_positions((112, 112), 28, 14)
+    assert len(pos) == 49                        # 7x7 sweep
+    covered = np.zeros((112, 112), bool)
+    for y, x in pos:
+        covered[y:y + 28, x:x + 28] = True
+    assert covered.all()
+    # non-dividing stride: last window clamps to the edge, still covers
+    pos = tile_positions((100, 90), 28, 24)
+    assert max(y for y, _ in pos) == 72 and max(x for _, x in pos) == 62
+    covered = np.zeros((100, 90), bool)
+    for y, x in pos:
+        covered[y:y + 28, x:x + 28] = True
+    assert covered.all()
+
+
+def test_tiler_extract_matches_slicing(clip):
+    frame = clip.frames()[0]
+    t = Tiler(stride=28)
+    tiles, pos = t.extract(frame)
+    assert tiles.shape == (len(pos), 28, 28, 1) and tiles.dtype == np.float32
+    for tile, (y, x) in zip(tiles, pos):
+        np.testing.assert_array_equal(tile, frame.pixels[y:y + 28, x:x + 28])
+
+
+def test_aggregate_thresholds_and_dedups():
+    t = Tiler(stride=14, threshold=0.9, min_dist=14)
+    pos = [(0, 0), (0, 14), (0, 70), (56, 56)]
+    scores = np.full((4, 10), 0.1, np.float32)
+    scores[0, 3] = 0.95           # hit
+    scores[1, 3] = 0.97           # stronger hit 14px away -> wins, 0 suppressed
+    scores[2, 7] = 0.93           # distinct object
+    scores[3, 5] = 0.50           # below threshold
+    dets = t.aggregate(scores, pos)
+    assert [(d.label, d.y, d.x) for d in dets] == [(3, 0, 14), (7, 0, 70)]
+    assert dets[0].score == pytest.approx(0.97)
+
+
+def test_aggregate_min_mass_gates_empty_windows():
+    t = Tiler(stride=14, threshold=0.9, min_mass=0.05)
+    pos = [(0, 0), (0, 70)]
+    scores = np.full((2, 10), 0.99, np.float32)       # both confident...
+    tiles = np.zeros((2, 28, 28, 1), np.float32)
+    tiles[1] += 0.2                                   # ...only one has pixels
+    dets = t.aggregate(scores, pos, tiles)
+    assert [(d.y, d.x) for d in dets] == [(0, 70)]
+    # without tiles the gate is a no-op
+    assert len(t.aggregate(scores, pos)) == 2
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_serves_exactly_the_offline_detections(params, clip, tiler):
+    eng = VisionEngine(params, backend="ref", batch_size=64, warmup=False)
+    pipe = StreamingPipeline(clip, eng, tiler)
+    res = pipe.run()
+    s = pipe.stats()
+    assert s["mode"] == "throughput"
+    assert s["frames_served"] == len(clip) and s["frames_dropped"] == 0
+    assert s["accounted"]
+    offline = [tiler.detect(params, f, backend="ref") for f in clip.frames()]
+    assert [r.detections for r in res] == offline
+    assert s["detections_total"] == sum(len(d) for d in offline) > 0
+    assert 0.0 < s["batch_occupancy"] <= 1.0
+
+
+def test_deadline_misses_are_counted_not_lost(params, clip, tiler):
+    eng = VisionEngine(params, backend="ref", batch_size=64, warmup=False)
+    pipe = StreamingPipeline(
+        PacedPlayer(clip, fps=100), eng, tiler,
+        config=StreamConfig(deadline_ms=1e-3, queue_size=4))
+    res = pipe.run()
+    s = pipe.stats()
+    assert res == [] and s["frames_served"] == 0
+    assert s["frames_dropped"] == s["frames_in"] == len(clip)
+    assert s["drops_by_reason"] == {"deadline": len(clip)}
+    assert s["accounted"]
+
+
+@dataclasses.dataclass
+class _FakeResult:
+    scores: np.ndarray
+
+
+class _SlowEngine:
+    """Stub inference: fixed per-wave delay, constant scores."""
+
+    def __init__(self, delay_s: float):
+        self.delay_s = delay_s
+
+    def serve(self, tiles):
+        time.sleep(self.delay_s)
+        return [_FakeResult(scores=np.zeros(10, np.float32)) for _ in tiles]
+
+
+def test_backpressure_bounds_queue_depth_under_fast_source(tiler):
+    clip = SyntheticVideoSource(n_frames=20, seed=1)
+    pipe = StreamingPipeline(
+        PacedPlayer(clip, fps=500), _SlowEngine(0.02), tiler,
+        config=StreamConfig(queue_size=2))
+    pipe.run()
+    s = pipe.stats()
+    assert s["mode"] == "realtime"
+    assert max(s["queue_hwm"].values()) <= 2
+    assert s["drops_by_reason"].get("queue_full", 0) > 0
+    assert s["accounted"]
+    assert s["frames_served"] + s["frames_dropped"] == 20
+
+
+def test_drop_policy_oldest_keeps_the_freshest_frames(tiler):
+    clip = SyntheticVideoSource(n_frames=20, seed=1)
+    pipe = StreamingPipeline(
+        PacedPlayer(clip, fps=500), _SlowEngine(0.02), tiler,
+        config=StreamConfig(queue_size=2, drop_policy="oldest"))
+    res = pipe.run()
+    s = pipe.stats()
+    assert s["accounted"] and s["drops_by_reason"].get("queue_full", 0) > 0
+    # evicting the stalest queued frame means the clip's LAST frame is
+    # always admitted and served
+    assert res and res[-1].index == 19
+
+
+def test_fixed_vs_fixed_pallas_detections_bit_identical(params, clip, tiler):
+    """The frozen-clip contract: identical int32 score words -> identical
+    detections (labels, coordinates, AND float scores) on both fixed
+    substrates, through the full pipeline."""
+    results = {}
+    for backend in ("fixed", "fixed_pallas"):
+        eng = VisionEngine(params, backend=backend, batch_size=64,
+                           warmup=False)
+        pipe = StreamingPipeline(clip, eng, tiler)
+        pipe.run()
+        assert pipe.stats()["accounted"]
+        assert pipe.stats()["frames_served"] == len(clip)
+        results[backend] = [r.detections for r in pipe.results]
+    assert sum(len(d) for d in results["fixed"]) > 0
+    assert results["fixed"] == results["fixed_pallas"]
+
+
+def test_engine_batch_occupancy(params):
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+    eng.serve([np.zeros((28, 28, 1), np.float32)] * 5)   # 2 steps, 3 padded
+    s = eng.stats()
+    assert s["batches"] == 2 and s["padded_slots"] == 3
+    assert s["batch_occupancy"] == pytest.approx(5 / 8)
+
+
+@pytest.mark.slow
+def test_router_soak_reconciles_every_frame(params, tiler):
+    """Several hundred frames through a 2-replica router: frames in ==
+    served + dropped, and the fleet saw exactly one wave of tiles per
+    served frame."""
+    clip = SyntheticVideoSource(n_frames=300, seed=11)
+    router = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                        batch_size=64, warmup=False)
+    pipe = StreamingPipeline(
+        PacedPlayer(clip, fps=40), router, tiler,
+        config=StreamConfig(deadline_ms=500, queue_size=4))
+    pipe.run()
+    s = pipe.stats()
+    assert s["accounted"]
+    assert s["frames_served"] + s["frames_dropped"] == 300
+    n_tiles = len(tiler.positions(clip.frame_shape))
+    assert s["engine"]["n"] == s["frames_served"] * n_tiles
+    assert s["frames_served"] > 0
