@@ -13,7 +13,16 @@ FPS target.  `--smoke` trims the sweep for the tier-1 CI lane and adds the
 detection assertions: the clip produces a deterministic nonzero detection
 count, and `fixed` vs `fixed_pallas` detections are bit-identical.
 
-    PYTHONPATH=src python -m benchmarks.stream_table --frames 100
+`--sweep` (implied by `--smoke`) additionally benchmarks the host tiler
+against the fully-convolutional frame sweep (`streaming/fcn_sweep.py`) in
+THROUGHPUT mode — unpaced, so sustained FPS is the raw pipeline rate, not
+the camera clock — at the same stride-8 window lattice, and reports the
+speedup per backend.  The smoke lane asserts the two paths' frozen-clip
+detections are identical on ref/fixed/fixed_pallas and that the sweep is
+STRICTLY faster than the host tiler on `ref` (the whole point of moving
+the windowing on device).
+
+    PYTHONPATH=src python -m benchmarks.stream_table --frames 100 --sweep
     PYTHONPATH=src python -m benchmarks.stream_table --frames 30 --smoke
 """
 from __future__ import annotations
@@ -23,20 +32,16 @@ import sys
 
 BACKENDS = ("ref", "pallas", "fixed", "fixed_pallas")
 SMOKE_BACKENDS = ("ref", "fixed", "fixed_pallas")
+SWEEP_STRIDE = 8               # the sweep lattice: must be a multiple of 4
+PARITY_BACKENDS = SMOKE_BACKENDS   # sweep-vs-tiler detection parity set
 
 
 def _params():
-    """Seeded params with every leaf nonzero (init zeroes biases, which
-    would flatten the confidence landscape) — no training run needed."""
-    import jax
-
+    """Seeded params with every leaf nonzero — no training run needed
+    (the shared `smallnet.seeded_params` recipe the golden generators and
+    frozen-clip tests pin)."""
     from repro.core import smallnet
-    params = smallnet.init_params(jax.random.key(0))
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    keys = jax.random.split(jax.random.key(1), len(leaves))
-    return jax.tree_util.tree_unflatten(treedef, [
-        l + 0.1 * jax.random.normal(k, l.shape, l.dtype)
-        for l, k in zip(leaves, keys)])
+    return smallnet.seeded_params()
 
 
 def _calibrated_tiler(params, source, stride: int):
@@ -64,7 +69,103 @@ def _run_row(params, source, tiler, engine, *, fps: float):
     return pipe.stats()
 
 
-def run(*, frames: int, fps: float, stride: int, smoke: bool):
+def _sweep_vs_tiler(params, *, frames: int, backends, smoke: bool):
+    """Throughput-mode tiler-vs-FCN-sweep pairs on the same stride-8 window
+    lattice: rows + failures (smoke gates detection parity and the ref
+    speedup)."""
+    from repro.serving.vision_engine import VisionEngine
+    from repro.streaming.fcn_sweep import FcnSweep
+    from repro.streaming.pipeline import StreamingPipeline
+    from repro.streaming.sources import SyntheticVideoSource
+
+    source = SyntheticVideoSource(n_frames=frames, seed=7)
+    host = _calibrated_tiler(params, source, SWEEP_STRIDE)
+    tilers = {"tiler": host,
+              "sweep": FcnSweep(stride=SWEEP_STRIDE,
+                                threshold=host.threshold)}
+
+    rows, failures = [], []
+    for backend in backends:
+        fps_by = {}
+        for kind, tiler in tilers.items():
+            # compile outside the serving clock (the VisionEngine warmup
+            # idiom): a one-time trace must not masquerade as steady-state
+            # frame cost.  The engine warms its batched step here; sweep
+            # pipelines warm their whole-frame program at construction.
+            eng = VisionEngine(params, backend=backend, batch_size=64,
+                               warmup=(kind == "tiler"))
+            # best of 2 runs: the speedup gate compares steady-state rates,
+            # and a single run is one scheduler hiccup away from flaking
+            best = None
+            for _ in range(2):
+                pipe = StreamingPipeline(source, eng, tiler)  # throughput
+                pipe.run()
+                s = pipe.stats()
+                if best is None or s["sustained_fps"] > best["sustained_fps"]:
+                    best = s
+            s = best
+            fps_by[kind] = s["sustained_fps"]
+            rows.append((
+                f"stream/{kind}_{backend}", s.get("latency_p50_ms"),
+                f"fps={s['sustained_fps']:.1f} "
+                f"p50={s.get('latency_p50_ms', 0):.1f}ms "
+                f"p99={s.get('latency_p99_ms', 0):.1f}ms "
+                f"drop_rate={s['drop_rate']:.2f} "
+                f"served={s['frames_served']}/{s['frames_in']} "
+                f"detections={s['detections_total']} "
+                f"accounted={'OK' if s['accounted'] else 'FAIL'}"))
+            if not s["accounted"]:
+                failures.append(f"{kind}_{backend}: unaccounted frames")
+        speedup = fps_by["sweep"] / fps_by["tiler"] if fps_by["tiler"] else 0.0
+        rows.append((f"stream/sweep_speedup_{backend}", None,
+                     f"speedup={speedup:.2f}x tiler={fps_by['tiler']:.1f} "
+                     f"sweep={fps_by['sweep']:.1f}"))
+        if smoke and backend == "ref" and not fps_by["sweep"] > fps_by["tiler"]:
+            failures.append(
+                f"FCN sweep is not strictly faster than the host tiler on "
+                f"'ref': {fps_by['sweep']:.1f} vs {fps_by['tiler']:.1f} FPS")
+
+    if smoke:
+        clip = SyntheticVideoSource(n_frames=min(frames, 8), seed=7).frames()
+        for backend in PARITY_BACKENDS:
+            dt = [tilers["tiler"].detect(params, f, backend=backend)
+                  for f in clip]
+            ds = [tilers["sweep"].detect(params, f, backend=backend)
+                  for f in clip]
+            n = sum(len(d) for d in dt)
+            # the fixed substrates are word-exact by construction, so their
+            # Detections (float scores included) must be identical; float
+            # backends carry ~1-ulp conv summation-order latitude, so the
+            # gate there is labels/positions exact + scores within 1e-5
+            # (a jaxlib upgrade must not redden the smoke on correct code)
+            exact = backend in ("fixed", "fixed_pallas")
+            ok = all(_same_detections(a, b, exact) for a, b in zip(dt, ds))
+            rows.append((f"stream/sweep_parity_{backend}", None,
+                         f"n={n} frames={len(clip)} "
+                         f"identical={'OK' if ok else 'FAIL'}"))
+            if not ok:
+                diff = sum(not _same_detections(a, b, exact)
+                           for a, b in zip(dt, ds))
+                failures.append(f"sweep vs tiler detections differ on "
+                                f"{diff}/{len(clip)} frames ({backend})")
+            if backend == "fixed" and n == 0:
+                failures.append("sweep parity clip produced zero detections")
+    return rows, failures
+
+
+def _same_detections(a, b, exact: bool) -> bool:
+    """Frame detection-list parity: strict equality for the word-exact
+    fixed substrates, float-tolerant scores for the float backends."""
+    if exact:
+        return a == b
+    return len(a) == len(b) and all(
+        da.label == db.label and da.y == db.y and da.x == db.x
+        and da.size == db.size and abs(da.score - db.score) <= 1e-5
+        for da, db in zip(a, b))
+
+
+def run(*, frames: int, fps: float, stride: int, smoke: bool,
+        sweep: bool = False):
     """Returns (rows, failures).  Rows follow the benchmarks CSV contract."""
     from repro.launch.mesh import make_serving_mesh
     from repro.serving.router import ReplicaRouter
@@ -121,6 +222,12 @@ def run(*, frames: int, fps: float, stride: int, smoke: bool):
 
     if smoke:
         failures += _detection_smoke(params, tiler, frames=min(frames, 10))
+    if sweep or smoke:
+        srows, sfail = _sweep_vs_tiler(
+            params, frames=min(frames, 20),
+            backends=("ref",) if smoke else names, smoke=smoke)
+        rows += srows
+        failures += sfail
     return rows, failures
 
 
@@ -152,12 +259,17 @@ def main() -> None:
     ap.add_argument("--stride", type=int, default=14,
                     help="sliding-window stride over the frame")
     ap.add_argument("--smoke", action="store_true",
-                    help="trimmed sweep + detection assertions (CI tier-1)")
+                    help="trimmed sweep + detection assertions (CI tier-1); "
+                         "implies --sweep for the ref backend")
+    ap.add_argument("--sweep", action="store_true",
+                    help="add throughput-mode tiler-vs-FCN-sweep comparison "
+                         "rows (speedup per backend)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     rows, failures = run(frames=args.frames, fps=args.fps,
-                         stride=args.stride, smoke=args.smoke)
+                         stride=args.stride, smoke=args.smoke,
+                         sweep=args.sweep)
     for name, val, derived in rows:
         val_s = f"{val:.2f}" if val is not None else ""
         print(f"{name},{val_s},{derived}")

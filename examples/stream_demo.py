@@ -7,8 +7,14 @@ window tiler -> batched engine waves on the chosen backend -> thresholded,
 deduplicated detections.  Prints sustained FPS, latency percentiles, drop
 accounting, and the per-frame detections vs. ground truth.
 
+With `--sweep` the sliding-window host tiler is swapped for the
+fully-convolutional frame sweep (`streaming/fcn_sweep.FcnSweep`): the conv
+trunk runs ONCE per frame on device and every window is scored from the
+pooled feature map — identical detections (word-exact on the fixed
+substrates), finer stride, no host patch extraction.
+
     PYTHONPATH=src python examples/stream_demo.py [--backend fixed_pallas]
-        [--frames 50] [--fps 10] [--no-train]
+        [--frames 50] [--fps 10] [--no-train] [--sweep]
 """
 import argparse
 
@@ -16,6 +22,7 @@ import jax
 
 from repro.core import backends, deploy, smallnet
 from repro.serving.vision_engine import VisionEngine
+from repro.streaming.fcn_sweep import FcnSweep
 from repro.streaming.pipeline import StreamConfig, StreamingPipeline
 from repro.streaming.sources import PacedPlayer, SyntheticVideoSource
 from repro.streaming.tiler import Tiler
@@ -27,7 +34,13 @@ def main():
                     choices=backends.list_backends())
     ap.add_argument("--frames", type=int, default=50)
     ap.add_argument("--fps", type=float, default=10.0)
-    ap.add_argument("--stride", type=int, default=14)
+    ap.add_argument("--stride", type=int, default=None,
+                    help="window stride (default: 14 for the host tiler, "
+                         "8 for --sweep; sweep strides must be multiples "
+                         "of 4)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="score windows from one full-frame conv sweep on "
+                         "device instead of host-extracted patches")
     ap.add_argument("--threshold", type=float, default=0.9)
     ap.add_argument("--min-mass", type=float, default=0.04,
                     help="foreground gate: skip windows whose mean pixel "
@@ -46,12 +59,21 @@ def main():
         print(f"   test_acc={res.test_acc:.4f}")
         params = res.params
 
+    mode = "FCN sweep" if args.sweep else "host tiler"
     print(f"== stream {args.frames} frames at {args.fps:g} FPS "
-          f"through backend={args.backend!r} ==")
+          f"through backend={args.backend!r} ({mode}) ==")
     source = SyntheticVideoSource(n_frames=args.frames, seed=7)
-    tiler = Tiler(stride=args.stride, threshold=args.threshold,
-                  min_mass=args.min_mass)
-    engine = VisionEngine(params, backend=args.backend, batch_size=64)
+    if args.sweep:
+        tiler = FcnSweep(stride=args.stride or 8, threshold=args.threshold,
+                         min_mass=args.min_mass)
+    else:
+        tiler = Tiler(stride=args.stride or 14, threshold=args.threshold,
+                      min_mass=args.min_mass)
+    # in sweep mode the engine only carries params/backend — skip compiling
+    # the batched 28x28 step it would never run (the pipeline warms the
+    # whole-frame sweep program itself)
+    engine = VisionEngine(params, backend=args.backend, batch_size=64,
+                          warmup=not args.sweep)
     pipe = StreamingPipeline(
         PacedPlayer(source, fps=args.fps), engine, tiler,
         config=StreamConfig(deadline_ms=3e3 / args.fps, queue_size=4))

@@ -159,6 +159,25 @@ class Backend:
         """conv + activation; backends with a fused epilogue override this."""
         return self.sigmoid(self.conv2x2_same(x, w, b))
 
+    def accumulate(self, a, b):
+        """Add two PRE-ACTIVATION conv partial sums in this backend's word
+        domain.  The FCN frame sweep (streaming/fcn_sweep.py) decomposes a
+        conv whose taps read from different feature maps into per-map
+        masked-weight convs and sums them; for the default float domain
+        that's plain `+`, while fixed-point backends override with
+        `fixed_add` so the running sum re-enters the Qm.n word width after
+        every step (wraparound addition is associative mod 2**bits, which is
+        what makes the decomposition bit-exact)."""
+        return a + b
+
+    def mask_conv_weight(self, w, mask):
+        """Zero out conv taps: w (2,2,1,1) backend-native, mask (2,2) of
+        0/1.  Tap-masking is how the sweep reproduces a patch's SAME-padding
+        zeros mid-frame (a zeroed tap contributes exactly 0 to the MAC in
+        every word domain).  Backends whose weights aren't plain arrays
+        (int8 QuantTensor) override."""
+        return w * jnp.asarray(mask, w.dtype).reshape(2, 2, 1, 1)
+
     def fused_conv_act_pool(self, x, w, b):
         """conv + activation + 2x2 maxpool — the full paper pipeline stage.
         Default composes the two hooks; backends whose kernel fuses the pool
@@ -297,6 +316,12 @@ class FixedBackend(Backend):
     def sigmoid(self, x):
         return fxp.fixed_sigmoid_plan(x, self.cfg)
 
+    def accumulate(self, a, b):
+        # wraparound fixed add is associative mod 2**total_bits, so partial
+        # conv sums recombine to exactly the single-conv accumulator word
+        # (saturate mode is NOT associative; the sweep rejects it up front)
+        return fxp.fixed_add(a, b, self.cfg)
+
 
 register_backend("fixed", FixedBackend())
 
@@ -374,6 +399,12 @@ class Int8Backend(Backend):
     def conv2x2_same(self, x, w, b):
         w = w.dequantize() if isinstance(w, ptq.QuantTensor) else w
         return conv_same_2x2(x, w, b)
+
+    def mask_conv_weight(self, w, mask):
+        # conv weights are dequant-on-use anyway, so mask the float view
+        # (conv2x2_same passes plain arrays straight through)
+        w = w.dequantize() if isinstance(w, ptq.QuantTensor) else w
+        return w * jnp.asarray(mask, w.dtype).reshape(2, 2, 1, 1)
 
     def dense(self, x, w, b):
         if not isinstance(w, ptq.QuantTensor):           # float fallback

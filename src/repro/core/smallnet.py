@@ -48,6 +48,20 @@ def param_count(params: dict) -> int:
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
 
 
+def seeded_params(seed: int = 0, noise: float = 0.1) -> dict:
+    """Deterministic params with every leaf nonzero (`init_params` zeroes
+    the biases, which would flatten any confidence landscape): the
+    no-training stand-in shared by the streaming benchmarks, the golden
+    generators, and the frozen-clip test batteries — ONE definition, so a
+    recipe tweak cannot silently desynchronize what those gates pin."""
+    params = init_params(jax.random.key(seed))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(jax.random.key(seed + 1), len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        l + noise * jax.random.normal(k, l.shape, l.dtype)
+        for l, k in zip(leaves, keys)])
+
+
 def _constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
     """Pin dim 0 to the "batch" logical axis, replicate the rest.
 
@@ -59,10 +73,10 @@ def _constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
     return shd.constrain(x, "batch", *(None,) * (x.ndim - 1))
 
 
-def _trunk(be: B.Backend, p: dict, images: jnp.ndarray) -> jnp.ndarray:
-    """The network up to (and including) the dense layer, PRE-activation —
-    the single definition of the paper's pipeline that `apply` (deployed,
-    + output sigmoid) and `forward_logits` (training view) both run."""
+def _conv_stages(be: B.Backend, p: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """Ingest + both conv->act->pool stages: images -> pooled feature maps
+    ((B,7,7,1) float NHWC or (B,7,7) fixed words for 28x28 inputs; any
+    spatial extent divides through as H/4 x W/4)."""
     x = _constrain_batch(be.ingest(images))
     # conv+act+pool goes through one hook so backends with a fully fused
     # stage (fixed_pallas: windowing+MAC+bias+PLAN+maxpool in ONE Pallas
@@ -70,8 +84,45 @@ def _trunk(be: B.Backend, p: dict, images: jnp.ndarray) -> jnp.ndarray:
     # fused_conv_act and maxpool2x2 exactly as before.
     x = _constrain_batch(be.fused_conv_act_pool(x, p["conv1"]["w"], p["conv1"]["b"]))
     x = _constrain_batch(be.fused_conv_act_pool(x, p["conv2"]["w"], p["conv2"]["b"]))
-    x = be.flatten(x)                                    # (B, 49)
+    return x
+
+
+def _dense_preact(be: B.Backend, p: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Pooled feature maps -> PRE-activation class scores (B, 10)."""
+    x = be.flatten(feats)                                # (B, 49)
     return be.dense(x, p["dense"]["w"], p["dense"]["b"])
+
+
+def _trunk(be: B.Backend, p: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """The network up to (and including) the dense layer, PRE-activation —
+    the single definition of the paper's pipeline that `apply` (deployed,
+    + output sigmoid) and `forward_logits` (training view) both run."""
+    return _dense_preact(be, p, _conv_stages(be, p, images))
+
+
+def conv_trunk(params: dict, images: jnp.ndarray, *,
+               backend: str | B.Backend = "ref") -> jnp.ndarray:
+    """The conv half of the pipeline as a separately callable stage:
+    images (B,H,W,1) -> pooled feature maps (B,H/4,W/4[,1] by layout).
+
+    This is the device-resident part of the paper's fabric (windowing ->
+    MAC -> bias -> PLAN -> pool, twice); `dense_head` is the 49->10
+    classifier that follows.  `apply(params, x) ==
+    dense_head(params, conv_trunk(params, x))` on every backend — the
+    FCN frame sweep (streaming/fcn_sweep.py) leans on this split to run
+    the trunk ONCE per frame and re-use the feature map for every window.
+    """
+    be = B.get_backend(backend)
+    return _conv_stages(be, be.prepare_params(params), images)
+
+
+def dense_head(params: dict, feats: jnp.ndarray, *,
+               backend: str | B.Backend = "ref") -> jnp.ndarray:
+    """The 49->10 dense classifier + output sigmoid over pooled feature
+    maps ((B,7,7[,1]) backend layout, or already-flat (B,49))."""
+    be = B.get_backend(backend)
+    p = be.prepare_params(params)
+    return _constrain_batch(be.sigmoid(_dense_preact(be, p, feats)))
 
 
 def apply(params: dict, images: jnp.ndarray, *,

@@ -11,6 +11,12 @@ materialized.  The VMEM budget therefore checks padded input + STRIDED
 output, which is what lets coarse-stride sweeps over frame-sized inputs
 (512x512 and up) run at all.  Identical values to decimating a stride-1
 output, since each output pixel's MAC is independent.
+
+Spatial extent is fully general (nothing here assumes the classifier's
+28x28): the streaming FCN sweep (streaming/fcn_sweep.py) runs this kernel
+over whole video frames, and the budget arithmetic is the only size gate —
+a stride-1 single-channel frame fits up to ~1300x1300 before the check
+trips (112x112 streaming frames use ~100 KB of the 14 MB budget).
 """
 from __future__ import annotations
 

@@ -9,6 +9,12 @@ optional fused PLAN + maxpool epilogues, and scalar/word-shape plumbing.
 
 `FixedPointConfig` is a frozen dataclass, so it rides through `jax.jit` as a
 static argument — one compiled executable per (shape, format, mode).
+
+Spatial extent is fully general: the FCN frame sweep runs these launches
+over whole HxW frames (112x112 streaming frames use ~400 KB of the 14 MB
+budget, including the limb temporaries; the check trips a little past
+670x670), and the fused `pool=True` epilogue crops odd extents to even
+exactly like the emulated `maxpool_fixed`.
 """
 from __future__ import annotations
 

@@ -5,10 +5,14 @@ The paper targets "real time, resource-constrained embedded applications" —
 pixels stream from the PS into the fabric at frame rate, not as pre-cropped
 batches.  This package is that workload: synthetic video sources with
 ground-truth tracks (`sources`), a sliding-window 28x28 tiler that turns the
-classifier into a full-frame detector (`tiler`), and an asyncio pipeline
+classifier into a full-frame detector (`tiler`), a fully-convolutional frame
+sweep that runs the conv trunk once per frame on device and scores every
+window from the pooled feature map (`fcn_sweep`, tiler-word-exact on the
+fixed substrates), and an asyncio pipeline
 with bounded queues, backpressure, and per-frame deadlines (`pipeline`) that
 infers through any `VisionEngine` / `ReplicaRouter` topology.
 """
+from repro.streaming.fcn_sweep import FcnSweep  # noqa: F401
 from repro.streaming.pipeline import StreamConfig, StreamingPipeline  # noqa: F401
 from repro.streaming.sources import (Frame, PacedPlayer,  # noqa: F401
                                      SyntheticVideoSource)

@@ -11,11 +11,20 @@ This module reproduces that discipline over the serving stack:
              arriving frame, "oldest" evicts the stalest queued frame).
              Throughput mode blocks instead — backpressure propagates to
              the source and nothing drops.
-  tile       sliding-window extraction (`streaming/tiler.py`).
+  tile       sliding-window extraction (`streaming/tiler.py`), or — when the
+             tiler is a full-frame sweep (`streaming/fcn_sweep.FcnSweep`,
+             `tiler.sweep` is True) — just the window-position bookkeeping:
+             the frame itself rides the queue as a single "tile".
   infer      one batched wave through a `VisionEngine` or `ReplicaRouter`
              (any object with `serve()`/`stats()`), run in a worker thread
-             so the event loop keeps ingesting on schedule.
-  aggregate  confidence thresholding + dedup -> `FrameResult`.
+             so the event loop keeps ingesting on schedule.  In sweep mode
+             the wave is instead ONE jitted full-frame trunk call via
+             `FcnSweep.score` on the engine's params/backend (the engine's
+             per-request batching machinery never sees the frame, so its
+             occupancy stats stay empty — the pipeline stats still carry
+             the full frame accounting).
+  aggregate  confidence thresholding + dedup -> `FrameResult` (identical
+             code path for both tilers: scores in, Detections out).
 
 Every frame's age is checked against the per-frame deadline at each stage
 boundary; a miss is COUNTED (reason + stage), never silently lost — the
@@ -93,6 +102,21 @@ class StreamingPipeline:
         self.engine = engine
         self.tiler = tiler if tiler is not None else Tiler()
         self.config = config
+        self.sweep = bool(getattr(self.tiler, "sweep", False))
+        if self.sweep and not (hasattr(engine, "params")
+                               and hasattr(engine, "backend")):
+            raise TypeError(
+                "sweep mode scores whole frames through the engine's model, "
+                f"but {type(engine).__name__} exposes no params/backend "
+                "(use a VisionEngine, or any object with .params/.backend)")
+        if self.sweep and hasattr(source, "frame_shape"):
+            # compile the whole-frame sweep program BEFORE the clip starts
+            # (the VisionEngine warmup idiom): a multi-second first-frame
+            # trace would otherwise blow every deadline in realtime mode
+            H, W = source.frame_shape
+            self.tiler.score(engine.params,
+                             np.zeros((1, H, W, 1), np.float32),
+                             backend=engine.backend)
         if config.realtime is not None:
             self.realtime = bool(config.realtime)
         else:
@@ -176,8 +200,11 @@ class StreamingPipeline:
             await self._admit(q_infer, "tile", item)
 
     def _serve_wave(self, tiles: np.ndarray) -> np.ndarray:
-        """One batched wave through the engine/router (worker thread)."""
+        """One batched wave through the engine/router (worker thread); in
+        sweep mode, one jitted full-frame trunk call instead."""
         eng = self.engine
+        if self.sweep:
+            return self.tiler.score(eng.params, tiles, backend=eng.backend)
         if getattr(eng, "drained", False):
             eng.reopen()                           # engines close after run()
         res = eng.serve(list(tiles))

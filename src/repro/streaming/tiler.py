@@ -4,10 +4,14 @@ The classifier only ever sees 28x28; a frame is swept by a window at a
 configurable stride, every patch is scored in ONE batched `smallnet.apply`
 call on any registered backend, and per-patch scores aggregate into a
 confidence grid from which thresholded, deduplicated detections with frame
-coordinates are extracted.  (Patch extraction is host-side numpy today; a
-fully-convolutional sweep that runs the conv stages once over the whole
-frame — where the natively-strided `kernels/conv2d` does the windowing on
-device — is the ROADMAP follow-up.)
+coordinates are extracted.
+
+Patch extraction here is host-side numpy, which re-convolves overlapping
+pixels up to 4x — the baseline path.  `streaming/fcn_sweep.FcnSweep` is the
+drop-in fully-convolutional alternative that runs the conv trunk ONCE over
+the whole frame on device and scores every window from the pooled feature
+map, word-exact with this tiler on the fixed substrates (the former ROADMAP
+follow-up, landed).
 
 Determinism contract: for integer-scored backends ("fixed"/"fixed_pallas")
 the int32 Qm.n words flow through `from_fixed` — identical words give
@@ -17,7 +21,7 @@ detection-bit-exact on a frozen clip (asserted in tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any, ClassVar, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -75,6 +79,11 @@ class Tiler:
     min_mass: float = 0.0
     cfg: fxp.FixedPointConfig = fxp.Q16_16   # word format of integer scores
 
+    # subclasses that score from a full-frame sweep instead of host-extracted
+    # patches (streaming/fcn_sweep.FcnSweep) flip this; the pipeline routes
+    # the per-frame device call accordingly
+    sweep: ClassVar[bool] = False
+
     def positions(self, frame_shape: tuple[int, int]) -> list[tuple[int, int]]:
         return tile_positions(frame_shape, self.patch, self.stride)
 
@@ -106,10 +115,29 @@ class Tiler:
     def confidence_grid(self, scores: np.ndarray,
                         positions: Sequence[tuple[int, int]]) -> np.ndarray:
         """(N, 10) scores -> (n_rows, n_cols) map of per-window max
-        confidence, in sweep order (the detector's heatmap view)."""
+        confidence, in sweep order (the detector's heatmap view).
+
+        The grid is only well-defined for a full rectangular sweep: the
+        column count is derived from the distinct x positions and checked
+        against the row count, so a non-product position list (e.g. a
+        future foreground-gated sparse sweep) fails loudly instead of
+        silently reshaping into a garbled heatmap."""
         conf = self._confidences(scores).max(axis=-1)
         n_rows = len({y for y, _ in positions})
-        return conf.reshape(n_rows, -1)
+        n_cols = len({x for _, x in positions})
+        if n_rows * n_cols != len(positions):
+            raise ValueError(
+                f"confidence_grid needs a full rectangular position grid: "
+                f"{len(positions)} positions cannot tile "
+                f"{n_rows} rows x {n_cols} cols")
+        return conf.reshape(n_rows, n_cols)
+
+    def _masses(self, tiles: np.ndarray,
+                positions: Sequence[tuple[int, int]]) -> np.ndarray:
+        """Per-window mean pixel intensity for the `min_mass` gate.  Here
+        `tiles` is the (N, patch, patch, 1) batch; the FCN sweep overrides
+        this to compute the same means from the frame itself."""
+        return np.asarray(tiles, np.float32).reshape(len(tiles), -1).mean(1)
 
     def aggregate(self, scores: np.ndarray,
                   positions: Sequence[tuple[int, int]],
@@ -124,7 +152,7 @@ class Tiler:
         labels = conf.argmax(axis=-1)
         best = conf.max(axis=-1)
         if self.min_mass > 0.0 and tiles is not None:
-            mass = np.asarray(tiles, np.float32).reshape(len(tiles), -1).mean(1)
+            mass = self._masses(tiles, positions)
             best = np.where(mass >= self.min_mass, best, -1.0)
         hits = [(float(best[i]), positions[i][0], positions[i][1],
                  int(labels[i]))

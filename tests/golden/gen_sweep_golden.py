@@ -1,0 +1,81 @@
+"""Generator for tests/golden/sweep_golden.json — run once, commit the JSON.
+
+    PYTHONPATH=src python tests/golden/gen_sweep_golden.py
+
+Freezes the Q16.16 words of the FCN sweep trunk over one deterministic
+112x112 synthetic frame (SyntheticVideoSource seed 7, frame 0) with the
+seeded benchmark params: all four pooled role maps (interior / last_row /
+last_col / corner, 28x28 int32 each) plus the (144, 10) window-score words
+of the stride-8 sweep.  Generation cross-checks three substrates and fails
+loudly on any disagreement:
+
+  * the emulated "fixed" sweep vs the "fixed_pallas" kernel sweep
+    (word-for-word on every map and score), and
+  * the sweep scores vs the host Tiler's patch-extract-and-score path on
+    the same window lattice — the independent patch-wise semantics that
+    the quad cascade must reproduce.
+
+So the frozen vectors pin the sweep's padding/edge arithmetic itself, not
+just one implementation of it.  The CI golden job regenerates this file
+and diffs it, exactly like fixed_golden.json.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import smallnet
+from repro.streaming.fcn_sweep import FcnSweep, sweep_feature_maps
+from repro.streaming.sources import SyntheticVideoSource
+from repro.streaming.tiler import Tiler
+
+STRIDE = 8
+MAPS = ("interior", "last_row", "last_col", "corner")
+
+
+def _check_equal(name, a, b):
+    if not np.array_equal(np.asarray(a, np.int64), np.asarray(b, np.int64)):
+        raise SystemExit(f"substrate drift while generating {name!r}")
+    return np.asarray(a, np.int64)
+
+
+def main() -> None:
+    params = smallnet.seeded_params()
+    frame = SyntheticVideoSource(n_frames=1, seed=7).frames()[0]
+
+    maps = {}
+    by_backend = {b: sweep_feature_maps(params, frame.pixels, backend=b)
+                  for b in ("fixed", "fixed_pallas")}
+    for name in MAPS:
+        maps[name] = _check_equal(f"map/{name}",
+                                  by_backend["fixed"][name],
+                                  by_backend["fixed_pallas"][name]).tolist()
+
+    sweep = FcnSweep(stride=STRIDE)
+    fb, pos = sweep.extract(frame)
+    scores = _check_equal("scores",
+                          sweep.score(params, fb, backend="fixed"),
+                          sweep.score(params, fb, backend="fixed_pallas"))
+    tiler = Tiler(stride=STRIDE)
+    tiles, pos_t = tiler.extract(frame)
+    assert pos == pos_t
+    patch_scores = tiler.score(params, tiles, backend="fixed")
+    _check_equal("scores vs host tiler", scores, patch_scores)
+
+    out = {
+        "frame": {"source": "SyntheticVideoSource(n_frames=1, seed=7)",
+                  "index": 0, "shape": [112, 112]},
+        "format": "q16_16", "stride": STRIDE,
+        "positions": [list(p) for p in pos],
+        "maps": maps,
+        "scores": scores.tolist(),
+    }
+    path = pathlib.Path(__file__).parent / "sweep_golden.json"
+    path.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"wrote {path} ({path.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Hypothesis property battery for the FCN sweep geometry.
+
+Pure lattice math — no model evaluation — so the properties range over
+arbitrary (H, W, stride) frames: the sweep's window set must equal
+`tile_positions` on the stride-4 pooled lattice, every pooled-map gather
+must stay in bounds (the 7x7 block of window (y, x) ends at pooled row
+y/4 + 6 <= H/4 - 1), coverage must be complete whenever the stride does
+not exceed the patch, and geometries that break the edge contract must
+raise rather than quietly score a misaligned window.
+
+Tier-1 runs the bounded versions; the `slow`-marked deep battery
+multiplies the example budget for the nightly lane, mirroring
+tests/test_fixed_pallas_props.py.
+"""
+import numpy as np
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.streaming.fcn_sweep import FcnSweep
+from repro.streaming.tiler import tile_positions
+
+PATCH = 28
+POOL = 4
+
+
+def _aligned_geometry():
+    """(H, W, stride) satisfying the sweep edge contract."""
+    side = st.integers(0, 40).map(lambda k: PATCH + POOL * k)
+    stride = st.integers(1, 10).map(lambda j: POOL * j)
+    return st.tuples(side, side, stride)
+
+
+def _check_geometry(H, W, stride):
+    s = FcnSweep(stride=stride)
+    pos = s.positions((H, W))
+
+    # identical to the host tiler's window set (same clamped edge handling)
+    assert pos == tile_positions((H, W), PATCH, stride)
+
+    # every window on the pooled lattice, fully inside the frame
+    for y, x in pos:
+        assert y % POOL == 0 and x % POOL == 0
+        assert 0 <= y <= H - PATCH and 0 <= x <= W - PATCH
+
+    # the position list is the full product of its row/col lattices, and
+    # the counts match the stride arithmetic (what confidence_grid needs)
+    ys = sorted({y for y, _ in pos})
+    xs = sorted({x for _, x in pos})
+    assert len(pos) == len(ys) * len(xs)
+    assert ys == sorted(set(list(range(0, H - PATCH, stride)) + [H - PATCH]))
+
+    # no out-of-bounds pooled gather: the window's 7x7 block ends in-map
+    k = PATCH // POOL
+    Hp, Wp = H // POOL, W // POOL  # pooled-map extent (H, W multiples of 4)
+    for y, x in pos:
+        assert y // POOL + k - 1 <= Hp - 1
+        assert x // POOL + k - 1 <= Wp - 1
+
+    # complete coverage whenever windows can overlap-or-touch
+    if stride <= PATCH:
+        covered = np.zeros((H, W), bool)
+        for y, x in pos:
+            covered[y:y + PATCH, x:x + PATCH] = True
+        assert covered.all()
+
+
+@hp.given(_aligned_geometry())
+@hp.settings(max_examples=30, deadline=None)
+def test_sweep_geometry_bounded(geom):
+    _check_geometry(*geom)
+
+
+@pytest.mark.slow
+@hp.given(_aligned_geometry())
+@hp.settings(max_examples=500, deadline=None)
+def test_sweep_geometry_deep(geom):
+    _check_geometry(*geom)
+
+
+@hp.given(st.integers(PATCH, PATCH + 160), st.integers(1, 40))
+@hp.settings(max_examples=30, deadline=None)
+def test_misaligned_geometry_raises(H, stride):
+    """Any (H - patch) % 4 != 0 frame or stride % 4 != 0 must raise."""
+    if stride % POOL:
+        with pytest.raises(ValueError):
+            FcnSweep(stride=stride)
+        return
+    s = FcnSweep(stride=stride)
+    if (H - PATCH) % POOL:
+        with pytest.raises(ValueError):
+            s.positions((H, H))
+    else:
+        assert s.positions((H, H))

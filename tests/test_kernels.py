@@ -137,3 +137,48 @@ def test_conv2d_stride2_small_shape_still_exact(rng):
     assert got.shape == (2, 6, 5, 4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# frame-extent generalization (the FCN sweep runs whole frames, not 28x28)
+# ---------------------------------------------------------------------------
+
+def test_conv2d_frame_extent_fused_stage(rng):
+    """The smallNet conv stage (2x2 SAME + fused sigmoid) at streaming
+    frame size — the sweep's per-frame launch shape — matches the oracle
+    and fits the VMEM budget with room to spare."""
+    x = jnp.asarray(rng.normal(size=(1, 112, 112, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 1, 1)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1,)), jnp.float32)
+    got = conv2d(x, w, b, activation="sigmoid")
+    want = conv2d_ref(x, w, b, activation="sigmoid")
+    assert got.shape == (1, 112, 112, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fixed_conv_frame_extent_and_budget(rng):
+    """kernels/fixed_conv at frame extents: the fused conv+PLAN+pool launch
+    on a 112x112 word map matches the emulated backend word-for-word, odd
+    extents pool like the emulated path, and the budget check trips on
+    frames that genuinely exceed VMEM (with the limb temporaries counted)."""
+    from repro.core import backends as B
+    from repro.core import fixed_point as fxp
+    from repro.kernels.fixed_conv import fixed_conv2d
+
+    cfg = fxp.Q16_16
+    x = jnp.asarray(rng.integers(-2 ** 20, 2 ** 20, (1, 112, 112)), jnp.int32)
+    w4 = jnp.asarray(rng.integers(-2 ** 14, 2 ** 14, (4,)), jnp.int32)
+    b = jnp.int32(rng.integers(-2 ** 14, 2 ** 14))
+    got = fixed_conv2d(x, w4, b, cfg=cfg, activation="plan", pool=True)
+    want = B.maxpool_fixed(fxp.fixed_sigmoid_plan(
+        B.conv_fixed(x, w4, b, cfg), cfg))
+    assert got.shape == (1, 56, 56)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # odd extent: even-crop before pooling, exactly like maxpool_fixed
+    odd = fixed_conv2d(x[:, :29, :29], w4, b, cfg=cfg, activation="plan",
+                       pool=True)
+    assert odd.shape == (1, 14, 14)
+    # a frame past ~670x670 exceeds input + limb-temporary VMEM
+    with pytest.raises(ValueError, match="VMEM"):
+        fixed_conv2d(jnp.zeros((1, 700, 700), jnp.int32), w4, b, cfg=cfg)

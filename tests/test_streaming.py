@@ -9,7 +9,6 @@ bit-identical detections on a frozen clip.
 import dataclasses
 import time
 
-import jax
 import numpy as np
 import pytest
 
@@ -23,12 +22,7 @@ from repro.streaming.tiler import Tiler, tile_positions
 
 @pytest.fixture(scope="module")
 def params():
-    p = smallnet.init_params(jax.random.key(0))
-    leaves, treedef = jax.tree_util.tree_flatten(p)
-    keys = jax.random.split(jax.random.key(1), len(leaves))
-    return jax.tree_util.tree_unflatten(treedef, [
-        l + 0.1 * jax.random.normal(k, l.shape, l.dtype)
-        for l, k in zip(leaves, keys)])
+    return smallnet.seeded_params()
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,67 @@
+"""Golden-vector regression for the FCN sweep trunk.
+
+tests/golden/sweep_golden.json freezes the Q16.16 words of the full-frame
+sweep over a deterministic 112x112 synthetic frame: all four pooled role
+maps (interior / last_row / last_col / corner) and the stride-8 window
+scores.  Both fixed substrates must reproduce every word — any drift in the
+masked-weight edge maps, the decomposed accumulation, or the underlying
+conv/PLAN/pool arithmetic fails here first, against vectors that cannot
+silently regenerate themselves (the CI golden job diffs a fresh
+generation).
+
+Regenerate (only after an INTENTIONAL semantics change) with:
+    PYTHONPATH=src python tests/golden/gen_sweep_golden.py
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import smallnet
+from repro.streaming.fcn_sweep import FcnSweep, sweep_feature_maps
+from repro.streaming.sources import SyntheticVideoSource
+
+_GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "sweep_golden.json").read_text())
+
+
+@pytest.fixture(scope="module")
+def params():
+    return smallnet.seeded_params()
+
+
+@pytest.fixture(scope="module")
+def frame():
+    f = SyntheticVideoSource(n_frames=1, seed=7).frames()[0]
+    assert list(f.pixels.shape[:2]) == _GOLDEN["frame"]["shape"]
+    return f
+
+
+def _assert_words(got, want, what):
+    np.testing.assert_array_equal(
+        np.asarray(got, np.int64), np.asarray(want, np.int64),
+        err_msg=f"{what}: sweep words drifted from golden vectors")
+
+
+def test_golden_covers_all_role_maps():
+    assert set(_GOLDEN["maps"]) == {"interior", "last_row", "last_col",
+                                    "corner"}
+    for m in _GOLDEN["maps"].values():
+        assert np.asarray(m).shape == (28, 28)
+
+
+@pytest.mark.parametrize("backend", ("fixed", "fixed_pallas"))
+def test_role_maps_golden(params, frame, backend):
+    maps = sweep_feature_maps(params, frame.pixels, backend=backend)
+    for name, want in _GOLDEN["maps"].items():
+        _assert_words(maps[name], want, f"{backend}/{name}")
+
+
+@pytest.mark.parametrize("backend", ("fixed", "fixed_pallas"))
+def test_window_scores_golden(params, frame, backend):
+    sweep = FcnSweep(stride=_GOLDEN["stride"])
+    fb, pos = sweep.extract(frame)
+    assert [list(p) for p in pos] == _GOLDEN["positions"]
+    got = sweep.score(params, fb, backend=backend)
+    _assert_words(got, _GOLDEN["scores"], f"{backend}/scores")
