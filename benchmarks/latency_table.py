@@ -26,6 +26,22 @@ _FLOPS = (28 * 28 * 4 * 2          # conv1 2x2 MACs
 _BYTES = 28 * 28 * 4 + 510 * 4
 
 
+def smoke(params, *, iters: int = 20) -> float:
+    """Single-image deployed latency (µs) on the bit-faithful substrate:
+    the baked fixed_pallas pipeline, measured quickly.  Context row for
+    benchmarks/perf_ledger.py — the ledger's gates are FPS *ratios*, this
+    absolute number just anchors them to a per-image cost."""
+    x = jnp.zeros((1, 28, 28, 1), jnp.float32)
+    qfix = smallnet.quantize_params_fixed(params)
+    baked = deploy.bake(
+        lambda q, xx: smallnet.apply(q, xx, backend="fixed_pallas"), qfix)
+    baked(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        baked(x).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def run(trained):
     rows = []
     params = trained.params

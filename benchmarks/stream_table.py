@@ -22,6 +22,20 @@ detections are identical on ref/fixed/fixed_pallas and that the sweep is
 STRICTLY faster than the host tiler on `ref` (the whole point of moving
 the windowing on device).
 
+The sweep lane also rows the `kernels/frame_trunk` MEGAKERNEL route
+(FcnSweep(megakernel=True)) against the composed cascade on both fixed
+substrates, with three smoke gates: the megakernel trunk must trace to
+exactly ONE `pallas_call` per frame (the composed fixed_pallas cascade to
+many), its frozen-clip detections must be bit-identical to the composed
+sweep's, and its FPS must hold the perf_ledger band (>= 85% of the
+composed sweep measured in the same run).
+
+`--real-device` flips the process-wide interpret switch off
+(`backends.set_interpret(False)`): every Pallas kernel compiles for the
+attached accelerator instead of running the CPU interpreter.  The CPU CI
+lanes keep the interpret default; the flag is for bench runs on real
+hardware.
+
     PYTHONPATH=src python -m benchmarks.stream_table --frames 100 --sweep
     PYTHONPATH=src python -m benchmarks.stream_table --frames 30 --smoke
 """
@@ -153,6 +167,90 @@ def _sweep_vs_tiler(params, *, frames: int, backends, smoke: bool):
     return rows, failures
 
 
+def _megakernel_rows(params, *, frames: int, smoke: bool):
+    """Composed-cascade vs one-launch-megakernel sweep rows on the fixed
+    substrates: launch topology (static jaxpr counts), frozen-clip
+    detection parity, and the in-run FPS band — the stream-side view of
+    what benchmarks/perf_ledger.py persists."""
+    import jax.numpy as jnp
+
+    from benchmarks.perf_ledger import FPS_BAND, MEGA_BACKENDS
+    from repro.analysis.launches import count_pallas_launches
+    from repro.core import backends as B
+    from repro.serving.vision_engine import VisionEngine
+    from repro.streaming import fcn_sweep as fs
+    from repro.streaming.fcn_sweep import FcnSweep
+    from repro.streaming.pipeline import StreamingPipeline
+    from repro.streaming.sources import SyntheticVideoSource
+
+    source = SyntheticVideoSource(n_frames=frames, seed=7)
+    host = _calibrated_tiler(params, source, SWEEP_STRIDE)
+    H, W = source.frame_shape
+    probe = jnp.zeros((1, H, W, 1), jnp.float32)
+
+    rows, failures = [], []
+    for backend in MEGA_BACKENDS:
+        be = B.get_backend(backend)
+        p = be.prepare_params(params)
+        launches = {mega: count_pallas_launches(
+            lambda f: fs._trunk_quad(be, p, f, mega), probe)
+            for mega in (False, True)}
+        fps_by, det_by = {}, {}
+        for kind, mega in (("composed", False), ("mega", True)):
+            tiler = FcnSweep(stride=SWEEP_STRIDE, threshold=host.threshold,
+                             megakernel=mega)
+            eng = VisionEngine(params, backend=backend, batch_size=64,
+                               warmup=False)
+            best = None            # best of 2, as in _sweep_vs_tiler
+            for _ in range(2):
+                pipe = StreamingPipeline(source, eng, tiler)
+                pipe.run()
+                s = pipe.stats()
+                if best is None or s["sustained_fps"] > best["sustained_fps"]:
+                    best = s
+            fps_by[kind] = best["sustained_fps"]
+            clip = SyntheticVideoSource(n_frames=min(frames, 8),
+                                        seed=7).frames()
+            det_by[kind] = [tiler.detect(params, f, backend=backend)
+                            for f in clip]
+            rows.append((
+                f"stream/{kind}_trunk_{backend}",
+                best.get("latency_p50_ms"),
+                f"fps={best['sustained_fps']:.1f} "
+                f"p50={best.get('latency_p50_ms', 0):.1f}ms "
+                f"p99={best.get('latency_p99_ms', 0):.1f}ms "
+                f"drop_rate={best['drop_rate']:.2f} "
+                f"trunk_launches/frame={launches[mega]}"))
+        ratio = fps_by["mega"] / fps_by["composed"] if fps_by["composed"] else 0
+        parity = det_by["mega"] == det_by["composed"]
+        rows.append((f"stream/mega_vs_composed_{backend}", None,
+                     f"fps_ratio={ratio:.2f} launches "
+                     f"{launches[False]}->{launches[True]} "
+                     f"detections_identical={'OK' if parity else 'FAIL'}"))
+        if smoke:
+            if launches[True] != 1:
+                failures.append(
+                    f"megakernel trunk on '{backend}' traces to "
+                    f"{launches[True]} pallas_calls per frame, not 1")
+            if backend == "fixed_pallas" and launches[False] <= 1:
+                failures.append(
+                    "composed fixed_pallas cascade unexpectedly traces to "
+                    f"{launches[False]} launches — the megakernel row is "
+                    "no longer measuring a fusion")
+            if not parity:
+                diff = sum(a != b for a, b in
+                           zip(det_by["mega"], det_by["composed"]))
+                failures.append(
+                    f"megakernel vs composed sweep detections differ on "
+                    f"{diff} frames ({backend}) — word-exactness broke")
+            if fps_by["mega"] < FPS_BAND * fps_by["composed"]:
+                failures.append(
+                    f"megakernel sweep on '{backend}' fell past the "
+                    f"{FPS_BAND:.0%} FPS band: {fps_by['mega']:.1f} vs "
+                    f"composed {fps_by['composed']:.1f}")
+    return rows, failures
+
+
 def _same_detections(a, b, exact: bool) -> bool:
     """Frame detection-list parity: strict equality for the word-exact
     fixed substrates, float-tolerant scores for the float backends."""
@@ -228,6 +326,10 @@ def run(*, frames: int, fps: float, stride: int, smoke: bool,
             backends=("ref",) if smoke else names, smoke=smoke)
         rows += srows
         failures += sfail
+        mrows, mfail = _megakernel_rows(
+            params, frames=min(frames, 20), smoke=smoke)
+        rows += mrows
+        failures += mfail
     return rows, failures
 
 
@@ -264,7 +366,14 @@ def main() -> None:
     ap.add_argument("--sweep", action="store_true",
                     help="add throughput-mode tiler-vs-FCN-sweep comparison "
                          "rows (speedup per backend)")
+    ap.add_argument("--real-device", action="store_true",
+                    help="compile Pallas kernels for the attached "
+                         "accelerator instead of the CPU interpreter "
+                         "(backends.set_interpret(False), process-wide)")
     args = ap.parse_args()
+    if args.real_device:
+        from repro.core import backends as B
+        B.set_interpret(False)
 
     print("name,us_per_call,derived")
     rows, failures = run(frames=args.frames, fps=args.fps,

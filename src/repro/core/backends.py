@@ -53,12 +53,19 @@ import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
 from repro.core import ptq
+from repro.core import runtime
 from repro.kernels.conv2d.ops import conv2d
 from repro.kernels.fixed_conv.ops import (fixed_conv2d, fixed_maxpool2x2,
                                           fixed_sigmoid)
+from repro.kernels.frame_trunk.ops import frame_trunk_quad
 from repro.kernels.maxpool2d.ops import maxpool2d
 from repro.kernels.quant_matmul.ops import fixed_dense, quant_matmul
 from repro.kernels.sigmoid_pla.ops import sigmoid_pla
+
+# the process-wide interpret/real-device switch, re-exported here because
+# the backend registry is where callers already look for substrate knobs
+set_interpret = runtime.set_interpret
+interpret_default = runtime.interpret_default
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +191,16 @@ class Backend:
         into the same launch (fixed_pallas) override this."""
         return self.maxpool2x2(self.fused_conv_act(x, w, b))
 
+    def frame_trunk(self, frames, p):
+        """Whole-frame trunk fast path: (1, H, W, 1) float frames + native
+        params -> the level-2 role-map quad (I, B, R, C), each (1, H/4,
+        W/4) in the backend's layout — or None when this backend has no
+        megakernel (or the geometry doesn't qualify), in which case callers
+        fall back to the composed per-stage path.  The fixed substrates
+        override this with the `kernels/frame_trunk` one-launch megakernel;
+        `smallnet.conv_trunk` and `FcnSweep` route through it."""
+        return None
+
 
 _REGISTRY: dict[str, Backend] = {}
 
@@ -242,12 +259,14 @@ class PallasBackend(Backend):
     "ref") or "plan" (the PLAN piecewise-linear epilogue, matches "plan");
     the standalone activation after the dense layer uses the matching
     implementation (sigmoid_pla VPU kernel for "plan").
-    `interpret=True` runs the kernels in the Pallas interpreter so the
-    backend works on CPU hosts; flip to False on real TPUs.
+    `interpret=None` follows the process-wide `core.runtime` switch
+    (interpreter on CPU hosts by default; `runtime.set_interpret(False)` —
+    or a benchmark's `--real-device` — compiles for real TPUs); an explicit
+    bool pins this instance regardless of the switch.
     """
     name: str = "pallas"
     activation: str = "sigmoid"
-    interpret: bool = True
+    interpret: bool | None = None
 
     def conv2x2_same(self, x, w, b):
         return conv2d(x, w, b, padding="SAME",
@@ -322,6 +341,23 @@ class FixedBackend(Backend):
         # (saturate mode is NOT associative; the sweep rejects it up front)
         return fxp.fixed_add(a, b, self.cfg)
 
+    def frame_trunk(self, frames, p):
+        # ONE Pallas launch for the whole trunk + quad role maps (the
+        # kernels/frame_trunk megakernel) — inherited by fixed_pallas, so
+        # both fixed substrates share the identical launch.  Word-exact
+        # with the composed path; geometry that can't tile (batch > 1,
+        # non-multiple-of-4 extents, saturating cfg) falls back by
+        # returning None.
+        B_, H, W = frames.shape[0], frames.shape[1], frames.shape[2]
+        if B_ != 1 or H % 4 or W % 4 or H < 4 or W < 4 or self.cfg.saturate:
+            return None
+        x = self.ingest(frames)                      # (1, H, W) int32 words
+        quad = frame_trunk_quad(
+            x[0], p["conv1"]["w"], p["conv1"]["b"],
+            p["conv2"]["w"], p["conv2"]["b"], cfg=self.cfg,
+            interpret=getattr(self, "interpret", None))
+        return tuple(quad[k][None] for k in range(4))
+
 
 register_backend("fixed", FixedBackend())
 
@@ -336,10 +372,11 @@ class FixedPallasBackend(FixedBackend):
     conv+PLAN+maxpool stage is a SINGLE launch via `fused_conv_act_pool`,
     the TPU analogue of the paper's fully fused fabric pipeline.  Output
     words are int32-identical to the emulated "fixed" backend (asserted by
-    the golden-vector and hypothesis batteries in tests/).
+    the golden-vector and hypothesis batteries in tests/).  `interpret=None`
+    follows the process-wide `core.runtime` switch.
     """
     name: str = "fixed_pallas"
-    interpret: bool = True
+    interpret: bool | None = None
 
     def _w4(self, w):
         # (2,2,1,1) int32 weight -> the 4 MAC taps, row-major like the
@@ -383,10 +420,11 @@ class Int8Backend(Backend):
     the dense layer through the kernels/quant_matmul Pallas wrapper —
     activations are quantized per-tensor on the fly, weights carry
     per-channel scales, accumulation is exact int32 with a fused dequant
-    epilogue (the MXU analogue of the paper's DSP MAC array)."""
+    epilogue (the MXU analogue of the paper's DSP MAC array).
+    `interpret=None` follows the process-wide `core.runtime` switch."""
     name: str = "int8"
     qcfg: ptq.QuantConfig = ptq.QuantConfig()
-    interpret: bool = True
+    interpret: bool | None = None
 
     def quantize_params(self, params):
         return ptq.quantize_tree(params, self.qcfg)

@@ -1,0 +1,61 @@
+"""Process-wide kernel-execution switches — ONE place to flip real-device mode.
+
+Every Pallas wrapper in kernels/*/ops.py takes `interpret: bool | None`
+and resolves `None` against this module's default, so the whole stack
+(backend registry -> FcnSweep -> StreamingPipeline -> benchmarks) moves
+between the CPU interpreter and compiled TPU kernels with a single call:
+
+    from repro.core import runtime
+    runtime.set_interpret(False)        # real-device run from here on
+
+The default is True (interpreter): CI and every test battery run on CPU
+hosts, and for this repo's integer kernels interpret mode is bit-identical
+to compiled mode (see kernels/fixed_conv/kernel.py).  Benchmarks expose the
+switch as `--real-device`.
+
+Why a module-level flag instead of threading a kwarg through every layer:
+the flag is resolved in each wrapper's THIN UN-JITTED entry point, before
+`jax.jit` ever sees it, so a changed default cannot be baked stale into a
+compiled executable.  `set_interpret` still clears jit caches (and any
+registered model-level caches, e.g. the FCN sweep's per-geometry program
+cache) so previously compiled programs from the old mode are dropped.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+_INTERPRET: bool = True
+_RESET_HOOKS: list[Callable[[], None]] = []
+
+
+def interpret_default() -> bool:
+    """The current process-wide interpret default."""
+    return _INTERPRET
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """What the ops wrappers call: explicit flag wins, None follows the
+    process default."""
+    return _INTERPRET if interpret is None else bool(interpret)
+
+
+def register_reset_hook(fn: Callable[[], None]) -> None:
+    """Register a cache-clearing callback to run on `set_interpret` (for
+    caches that close over compiled programs, like `fcn_sweep._sweep_fn`)."""
+    if fn not in _RESET_HOOKS:
+        _RESET_HOOKS.append(fn)
+
+
+def set_interpret(flag: bool) -> None:
+    """Flip the process between Pallas interpret (CPU) and compiled (TPU)
+    execution.  Clears jit caches + registered model caches so nothing
+    compiled under the old mode survives."""
+    global _INTERPRET
+    flag = bool(flag)
+    if flag == _INTERPRET:
+        return
+    _INTERPRET = flag
+    import jax
+    jax.clear_caches()
+    for hook in _RESET_HOOKS:
+        hook()

@@ -111,9 +111,20 @@ def conv_trunk(params: dict, images: jnp.ndarray, *,
     dense_head(params, conv_trunk(params, x))` on every backend — the
     FCN frame sweep (streaming/fcn_sweep.py) leans on this split to run
     the trunk ONCE per frame and re-use the feature map for every window.
+
+    Single-frame calls on backends with a whole-frame megakernel (the
+    fixed substrates' `frame_trunk` hook, kernels/frame_trunk) take the
+    one-launch fast path; its interior map is word-identical to the
+    composed stages, so the hook changes launches, not values.
     """
     be = B.get_backend(backend)
-    return _conv_stages(be, be.prepare_params(params), images)
+    p = be.prepare_params(params)
+    x = jnp.asarray(images)
+    if x.ndim == 4 and x.shape[0] == 1:
+        quad = be.frame_trunk(x, p)
+        if quad is not None:
+            return quad[0]                     # interior == the plain trunk
+    return _conv_stages(be, p, images)
 
 
 def dense_head(params: dict, feats: jnp.ndarray, *,

@@ -25,23 +25,35 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime
 from repro.kernels.conv2d.kernel import conv2d_pallas
 
 _VMEM_BUDGET = 14 * 2 ** 20  # leave headroom out of ~16 MB/core
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "apply_sigmoid", "activation",
-                                             "interpret"))
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None, *,
            stride: int = 1, padding: str = "SAME",
            apply_sigmoid: bool = False, activation: str | None = None,
-           interpret: bool = True) -> jnp.ndarray:
+           interpret: bool | None = None) -> jnp.ndarray:
     """NHWC x HWIO -> NHWC, f32. Pallas windowing+MAC kernel.
 
     `activation` in {None, "sigmoid", "plan"} fuses the activation unit into
     the kernel epilogue (`apply_sigmoid=True` is legacy for "sigmoid").
+    `interpret=None` follows the process-wide `core.runtime` switch; the
+    flag is resolved HERE, in the un-jitted entry point, so flipping the
+    default can never be baked stale into a compiled executable.
     """
+    return _conv2d_jit(x, w, b, stride=stride, padding=padding,
+                       apply_sigmoid=apply_sigmoid, activation=activation,
+                       interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding",
+                                             "apply_sigmoid", "activation",
+                                             "interpret"))
+def _conv2d_jit(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None, *,
+                stride: int, padding: str, apply_sigmoid: bool,
+                activation: str | None, interpret: bool) -> jnp.ndarray:
     kh, kw, cin, cout = w.shape
     if b is None:
         b = jnp.zeros((cout,), jnp.float32)

@@ -35,6 +35,13 @@ elementwise and identically evaluated on both substrates.)
 
 Grid: (batch,) with whole spatial dims in VMEM, mirroring kernels/conv2d;
 the ops.py wrapper enforces the VMEM budget and handles padding/stride.
+
+Granularity note: this kernel fuses ONE pipeline stage per launch (the
+deployed 28x28 classifier runs two of them).  `kernels/frame_trunk` is the
+whole-frame sibling: both trunk stages plus the sweep's quad role maps over
+a spatially TILED big frame in a single launch, built from the same
+`fixed_point` helpers — so the two fusion granularities share one
+arithmetic definition and cannot drift.
 """
 from __future__ import annotations
 

@@ -15,6 +15,12 @@ over whole HxW frames (112x112 streaming frames use ~400 KB of the 14 MB
 budget, including the limb temporaries; the check trips a little past
 670x670), and the fused `pool=True` epilogue crops odd extents to even
 exactly like the emulated `maxpool_fixed`.
+
+These are the PER-STAGE launches; `kernels/frame_trunk` fuses BOTH trunk
+stages (and all of the sweep's role maps) over a spatially tiled big frame
+into one launch, reusing the same `fixed_point` word semantics — the
+relationship mirrors `conv2d` <-> `fixed_conv`: same arithmetic contract,
+different fusion granularity.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
+from repro.core import runtime
 from repro.kernels.fixed_conv.kernel import (fixed_conv2d_pallas,
                                              fixed_maxpool2x2_pallas,
                                              fixed_sigmoid_plan_pallas)
@@ -44,20 +51,32 @@ def _check_vmem(Hp: int, Wp: int, H1: int, W1: int) -> None:
             "with limb temporaries)")
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "activation", "pool",
-                                             "stride", "interpret"))
 def fixed_conv2d(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray, *,
                  cfg: fxp.FixedPointConfig = fxp.Q16_16,
                  activation: str | None = None, pool: bool = False,
-                 stride: int = 1, interpret: bool = True) -> jnp.ndarray:
+                 stride: int = 1,
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Fused fixed-point 2x2 SAME conv: (B,H,W) int32 -> (B,H,W) int32.
 
     `activation="plan"` fuses the shift-add PLAN sigmoid epilogue;
     `pool=True` additionally fuses the 2x2/2 comparator-tree maxpool
     (output (B, H//2, W//2)); `stride>1` decimates the full stride-1 output
     (mutually exclusive with `pool`).  Bit-exact with the emulated "fixed"
-    backend (`backends.conv_fixed` et al.) in every format/mode.
+    backend (`backends.conv_fixed` et al.) in every format/mode, and with
+    the `kernels/frame_trunk` megakernel that fuses both trunk stages.
+    `interpret=None` follows the `core.runtime` process default.
     """
+    return _fixed_conv2d_jit(x, w4, b, cfg=cfg, activation=activation,
+                             pool=pool, stride=stride,
+                             interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "activation", "pool",
+                                             "stride", "interpret"))
+def _fixed_conv2d_jit(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray, *,
+                      cfg: fxp.FixedPointConfig, activation: str | None,
+                      pool: bool, stride: int,
+                      interpret: bool) -> jnp.ndarray:
     if activation not in _ACTIVATIONS:
         raise ValueError(f"activation must be one of {_ACTIVATIONS}")
     if pool and stride > 1:
@@ -74,20 +93,32 @@ def fixed_conv2d(x: jnp.ndarray, w4: jnp.ndarray, b: jnp.ndarray, *,
     return y
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fixed_maxpool2x2(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+def fixed_maxpool2x2(x: jnp.ndarray, *,
+                     interpret: bool | None = None) -> jnp.ndarray:
     """(B, H, W) int32 -> (B, H//2, W//2), VALID 2x2/2 comparator tree."""
+    return _fixed_maxpool2x2_jit(
+        x, interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fixed_maxpool2x2_jit(x: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
     B, H, W = x.shape
     He, We = H - H % 2, W - W % 2
     return fixed_maxpool2x2_pallas(x[:, :He, :We].astype(jnp.int32),
                                    interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def fixed_sigmoid(x: jnp.ndarray, *,
                   cfg: fxp.FixedPointConfig = fxp.Q16_16,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool | None = None) -> jnp.ndarray:
     """Standalone PLAN sigmoid launch over any-shaped int32 words."""
+    return _fixed_sigmoid_jit(x, cfg=cfg,
+                              interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def _fixed_sigmoid_jit(x: jnp.ndarray, *, cfg: fxp.FixedPointConfig,
+                       interpret: bool) -> jnp.ndarray:
     shape = x.shape
     C = shape[-1] if len(shape) > 1 else 1
     x2 = x.astype(jnp.int32).reshape(-1, C)

@@ -1,0 +1,7 @@
+"""Tiled big-frame trunk megakernel: smallNet's whole conv trunk, one launch."""
+from repro.kernels.frame_trunk.ops import (HALO, choose_tile,
+                                           frame_trunk_quad,
+                                           frame_trunk_vmem_bytes)
+
+__all__ = ["HALO", "choose_tile", "frame_trunk_quad",
+           "frame_trunk_vmem_bytes"]

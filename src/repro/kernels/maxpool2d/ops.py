@@ -6,12 +6,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime
 from repro.kernels.maxpool2d.kernel import maxpool2d_pallas
 
 
+def maxpool2d(x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H//2, W//2, C), VALID 2x2/2 max pool.
+    `interpret=None` follows the `core.runtime` process default."""
+    return _maxpool2d_jit(x, interpret=runtime.resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def maxpool2d(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """(B, H, W, C) -> (B, H//2, W//2, C), VALID 2x2/2 max pool."""
+def _maxpool2d_jit(x: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
     B, H, W, C = x.shape
     He, We = H - H % 2, W - W % 2
     return maxpool2d_pallas(x[:, :He, :We, :], interpret=interpret)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
+from repro.core import runtime
 from repro.kernels.quant_matmul.kernel import (fixed_matmul_pallas,
                                                quant_matmul_pallas)
 
@@ -22,15 +23,24 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
                  sx: jnp.ndarray | float = 1.0,
                  sw: jnp.ndarray | float = 1.0, *,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Dequantized f32 = (xq @ wq) * sx[:,None] * sw[None,:].
 
     xq (M,K) int8; wq (K,N) int8; sx scalar or (M,); sw scalar or (N,).
+    `interpret=None` follows the `core.runtime` process default.
     """
+    return _quant_matmul_jit(xq, wq, sx, sw,
+                             interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _quant_matmul_jit(xq: jnp.ndarray, wq: jnp.ndarray,
+                      sx: jnp.ndarray | float,
+                      sw: jnp.ndarray | float, *,
+                      interpret: bool) -> jnp.ndarray:
     M, K = xq.shape
     _, N = wq.shape
     sx = jnp.broadcast_to(jnp.asarray(sx, jnp.float32).reshape(-1), (M,)) \
@@ -50,15 +60,23 @@ def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
     return y[:M, :N]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def fixed_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
                 *, cfg: fxp.FixedPointConfig = fxp.Q16_16,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     """Fixed-point dense layer launch: (M,K) @ (K,N) + b, all int32 Qm.n.
 
     Zero-pads the batch to the block size (a zero row is a valid fixed word
     vector, so padded rows are just discarded work) and slices back.
+    `interpret=None` follows the `core.runtime` process default.
     """
+    return _fixed_dense_jit(x, w, b, cfg=cfg,
+                            interpret=runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def _fixed_dense_jit(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None,
+                     *, cfg: fxp.FixedPointConfig,
+                     interpret: bool) -> jnp.ndarray:
     M, K = x.shape
     _, N = w.shape
     if b is None:

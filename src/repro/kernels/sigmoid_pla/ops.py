@@ -6,11 +6,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime
 from repro.kernels.sigmoid_pla.kernel import sigmoid_pla_pallas
 
 
+def sigmoid_pla(x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """PLAN sigmoid launch; `interpret=None` follows `core.runtime`."""
+    return _sigmoid_pla_jit(x, interpret=runtime.resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def sigmoid_pla(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+def _sigmoid_pla_jit(x: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
     shape = x.shape
     flat = x.astype(jnp.float32).reshape(-1)
     C = 128

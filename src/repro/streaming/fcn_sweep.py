@@ -51,6 +51,14 @@ Edge/geometry contract (validated loudly, tested in tests/test_fcn_sweep.py):
     registered `fixed`/`fixed_pallas` backends use the hardware-faithful
     wraparound mode, which is exact.
 
+Launch topology: the composed cascade dispatches O(stages x role-maps)
+kernel launches per frame on the Pallas substrates (4 single-source + 5
+mixed-source convs at level 1, plus pools and PLAN units).  On the fixed
+substrates the whole quad trunk now also exists as ONE tiled Pallas launch
+(`kernels/frame_trunk`), reached through `Backend.frame_trunk`; the
+`megakernel` knob below picks the route, and `benchmarks/perf_ledger.py`
+pins launches-per-frame for both.
+
 `FcnSweep` is `Tiler`-compatible: `positions` / `extract` / `score` /
 `confidence_grid` / `aggregate` / `detect` have the same shapes and
 semantics (`extract` returns the frame itself as a single "tile" batch),
@@ -69,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backends as B
+from repro.core import runtime
 from repro.core import smallnet
 from repro.streaming.sources import Frame
 from repro.streaming.tiler import Tiler, tile_positions
@@ -164,11 +173,28 @@ def _squeeze_map(x):
     return x[0, ..., 0] if x.ndim == 4 else x[0]
 
 
-def _trunk_quad(be: B.Backend, p: dict, frames):
+def _trunk_quad(be: B.Backend, p: dict, frames, megakernel: bool | None = None):
     """Both conv stages of the sweep over one (1,H,W,1) float frame batch:
     the level-2 role-map quad (I, B, R, C), each (1, H/4, W/4[, 1]).  The
     single trunk definition shared by the jitted scorer and the
-    golden-pinned `sweep_feature_maps` view."""
+    golden-pinned `sweep_feature_maps` view.
+
+    `megakernel` routes through the backend's whole-frame `frame_trunk`
+    hook (kernels/frame_trunk: the entire quad trunk in ONE Pallas launch
+    on the fixed substrates): None tries the hook and falls back to the
+    composed per-stage path, True requires it (raising where no megakernel
+    exists), False forces the composed path (what the megakernel's
+    word-exactness gates compare against)."""
+    if megakernel is None or megakernel:
+        quad = be.frame_trunk(frames, p)
+        if quad is not None:
+            return quad
+        if megakernel:
+            raise NotImplementedError(
+                f"backend {be.name!r} has no frame_trunk megakernel for "
+                f"frames of shape {tuple(frames.shape)} (the one-launch "
+                f"trunk exists on the fixed substrates, for single "
+                f"multiple-of-4 frames)")
     x = be.ingest(frames)
     quad = (x, x, x, x)      # pixels are role-independent at level 0
     quad = _sweep_stage(be, quad, p["conv1"]["w"], p["conv1"]["b"])
@@ -187,7 +213,8 @@ def _check_saturation(be: B.Backend) -> None:
 
 @functools.lru_cache(maxsize=64)
 def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
-              positions: tuple[tuple[int, int], ...]):
+              positions: tuple[tuple[int, int], ...],
+              megakernel: bool | None = None):
     """Jitted whole-sweep function for one (backend, geometry): params +
     (1,H,W,1) float frame -> (n_windows, 10) backend-native scores, ONE
     device call per frame."""
@@ -202,7 +229,8 @@ def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
 
     def run(params, frame):
         p = be.prepare_params(params)
-        I2, B2, R2, C2 = (_squeeze_map(m) for m in _trunk_quad(be, p, frame))
+        I2, B2, R2, C2 = (_squeeze_map(m)
+                          for m in _trunk_quad(be, p, frame, megakernel))
         feats = jnp.where(
             is_last_row & is_last_col, C2[rows, cols],
             jnp.where(is_last_row, B2[rows, cols],
@@ -214,19 +242,27 @@ def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
     return jax.jit(run)
 
 
+# flipping the process-wide interpret switch must drop programs compiled
+# under the old mode (core/runtime.py documents the staleness hazard)
+runtime.register_reset_hook(_sweep_fn.cache_clear)
+
+
 def sweep_feature_maps(params: Any, frame: np.ndarray | jnp.ndarray, *,
-                       backend: str | B.Backend = "ref"):
+                       backend: str | B.Backend = "ref",
+                       megakernel: bool | None = None):
     """The level-2 role-map quad for one (H,W[,1]) frame: a dict of
     (H/4, W/4) pooled feature maps {"interior", "last_row", "last_col",
     "corner"} in the backend's native domain (Qm.n int32 words for the
     fixed substrates).  This is the sweep trunk without the dense head —
-    what the golden vectors freeze."""
+    what the golden vectors freeze.  `megakernel` as in `_trunk_quad`
+    (False pins the composed per-stage path; the golden generators use it
+    so frozen vectors keep pinning the decomposition itself)."""
     be = B.get_backend(backend)
     _check_saturation(be)
     f = jnp.asarray(np.asarray(frame, np.float32))
     if f.ndim == 2:
         f = f[..., None]
-    quad = _trunk_quad(be, be.prepare_params(params), f[None])
+    quad = _trunk_quad(be, be.prepare_params(params), f[None], megakernel)
     names = ("interior", "last_row", "last_col", "corner")
     return {n: np.asarray(_squeeze_map(m)) for n, m in zip(names, quad)}
 
@@ -241,8 +277,18 @@ class FcnSweep(Tiler):
     returns the frame itself as a (1,H,W,1) "tile" batch (the mass gate
     computes per-window means from it), and `score` runs the jitted sweep:
     one device call per frame on any registered backend.
+
+    `megakernel` selects the trunk implementation inside that call:
+    None (default) uses the backend's one-launch `frame_trunk` megakernel
+    where it exists (the fixed substrates) and the composed role-map
+    cascade elsewhere; False forces the composed cascade everywhere (the
+    word-exactness baselines pin against this); True requires the
+    megakernel and raises on backends without one.  All three produce
+    identical words on the fixed substrates — the knob changes launches
+    per frame, not scores.
     """
     stride: int = 8
+    megakernel: bool | None = None
     sweep: ClassVar[bool] = True
 
     def __post_init__(self):
@@ -293,7 +339,7 @@ class FcnSweep(Tiler):
                 f"per-frame device program), got batch {frames.shape[0]}")
         H, W = frames.shape[1], frames.shape[2]
         pos = tuple(self.positions((H, W)))
-        fn = _sweep_fn(be, (H, W), self.patch, pos)
+        fn = _sweep_fn(be, (H, W), self.patch, pos, self.megakernel)
         return np.asarray(fn(params, jnp.asarray(frames)))
 
     def _masses(self, tiles: np.ndarray,

@@ -1,0 +1,66 @@
+"""Golden-vector regression for the trunk megakernel.
+
+tests/golden/frame_trunk_golden.json freezes the megakernel's level-2 quad
+words over the deterministic 112x112 synthetic frame in BOTH deployed
+formats (Q16.16 and Q8.8).  Both fixed substrates must reproduce every word
+through the one-launch route — any drift in the tile chooser, the halo DMA,
+the in-kernel edge masking, or the underlying arithmetic fails here first,
+against vectors that cannot silently regenerate themselves (the CI golden
+job diffs a fresh generation).
+
+Regenerate (only after an INTENTIONAL semantics change) with:
+    PYTHONPATH=src python tests/golden/gen_frame_trunk_golden.py
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core import fixed_point as fxp
+from repro.core import smallnet
+from repro.streaming.fcn_sweep import sweep_feature_maps
+from repro.streaming.sources import SyntheticVideoSource
+
+_GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden"
+     / "frame_trunk_golden.json").read_text())
+
+_FORMATS = {"q16_16": fxp.Q16_16, "q8_8": fxp.Q8_8}
+_MAPS = ("interior", "last_row", "last_col", "corner")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return smallnet.seeded_params()
+
+
+@pytest.fixture(scope="module")
+def frame():
+    f = SyntheticVideoSource(n_frames=1, seed=7).frames()[0]
+    assert list(f.pixels.shape[:2]) == _GOLDEN["frame"]["shape"]
+    return f
+
+
+def test_golden_covers_both_formats_and_all_maps():
+    assert set(_GOLDEN["maps"]) == set(_FORMATS)
+    for fmt in _FORMATS:
+        assert set(_GOLDEN["maps"][fmt]) == set(_MAPS)
+        for m in _GOLDEN["maps"][fmt].values():
+            assert np.asarray(m).shape == (28, 28)
+
+
+@pytest.mark.parametrize("fmt", sorted(_FORMATS))
+@pytest.mark.parametrize("kind", ("fixed", "fixed_pallas"))
+def test_megakernel_maps_golden(params, frame, fmt, kind):
+    cls = B.FixedBackend if kind == "fixed" else B.FixedPallasBackend
+    be = cls(name=f"{kind}_{fmt}_golden", cfg=_FORMATS[fmt])
+    maps = sweep_feature_maps(params, frame.pixels, backend=be,
+                              megakernel=True)
+    for name in _MAPS:
+        np.testing.assert_array_equal(
+            np.asarray(maps[name], np.int64),
+            np.asarray(_GOLDEN["maps"][fmt][name], np.int64),
+            err_msg=f"{kind}/{fmt}/{name}: megakernel words drifted from "
+                    f"golden vectors")

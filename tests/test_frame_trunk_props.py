@@ -1,0 +1,125 @@
+"""Hypothesis property battery for the megakernel's VMEM/tile chooser.
+
+`choose_tile` is static arithmetic (no tracing, no device), so the
+properties range widely over frame geometries, halo widths, and budgets:
+the chosen tile must always divide the frame on the pooled lattice and fit
+the budget; frames that cannot fit any tile — or that break the
+multiple-of-4 contract, including odd and 112..512-range non-multiples —
+must raise loudly rather than launch a kernel that oversubscribes VMEM.
+
+The one model-evaluating property is the degenerate single-tile case: when
+the whole frame is one tile there is no halo, no seam, and no DMA offset
+arithmetic left, so the megakernel's interior map must equal the plain
+composition of two fused `fixed_conv2d(activation="plan", pool=True)`
+launches word-for-word.
+"""
+import numpy as np
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.kernels.fixed_conv.ops import fixed_conv2d
+from repro.kernels.fixed_conv.ref import random_words
+from repro.kernels.frame_trunk import (choose_tile, frame_trunk_quad,
+                                       frame_trunk_vmem_bytes)
+from repro.kernels.frame_trunk.ops import _VMEM_BUDGET, check_frame_geometry
+
+# frames on the pooled lattice, spanning the ISSUE's 112..512 deployment
+# range and the tiny end where tile == frame
+_side = st.integers(1, 128).map(lambda k: 4 * k)          # 4..512
+_halo = st.integers(1, 8)
+_budget = st.integers(frame_trunk_vmem_bytes(4, 4, halo=8),
+                      4 * _VMEM_BUDGET)
+
+
+@hp.given(H=_side, W=_side, halo=_halo, budget=_budget)
+@hp.settings(max_examples=150, deadline=None)
+def test_choose_tile_respects_budget_and_lattice(H, W, halo, budget):
+    th, tw = choose_tile(H, W, halo=halo, budget=budget)
+    assert th % 4 == 0 and tw % 4 == 0 and th >= 4 and tw >= 4
+    assert H % th == 0 and W % tw == 0
+    assert frame_trunk_vmem_bytes(th, tw, halo=halo) <= budget
+
+
+@hp.given(H=_side, W=_side, halo=_halo)
+@hp.settings(max_examples=60, deadline=None)
+def test_choose_tile_is_maximal(H, W, halo):
+    """No legal tile with a larger area fits the budget — the chooser
+    never leaves VMEM on the table."""
+    th, tw = choose_tile(H, W, halo=halo)
+    for a in range(4, H + 1, 4):
+        if H % a:
+            continue
+        for b in range(4, W + 1, 4):
+            if W % b or a * b <= th * tw:
+                continue
+            assert frame_trunk_vmem_bytes(a, b, halo=halo) > _VMEM_BUDGET
+
+
+@hp.given(H=st.integers(4, 512), W=st.integers(4, 512))
+@hp.settings(max_examples=100, deadline=None)
+def test_off_lattice_frames_rejected(H, W):
+    """Odd and non-multiple-of-4 extents anywhere in the deployment range
+    raise; lattice-aligned ones pass the geometry check."""
+    if H % 4 == 0 and W % 4 == 0:
+        check_frame_geometry(H, W)
+    else:
+        with pytest.raises(ValueError, match="lattice"):
+            check_frame_geometry(H, W)
+
+
+@hp.given(n=st.integers(0, 3), m=st.integers(0, 3))
+@hp.settings(max_examples=20, deadline=None)
+def test_too_small_frames_rejected(n, m):
+    with pytest.raises(ValueError, match="small"):
+        check_frame_geometry(n, m)
+
+
+@hp.given(H=_side, W=_side, halo=_halo)
+@hp.settings(max_examples=40, deadline=None)
+def test_impossible_budget_rejected_loudly(H, W, halo):
+    floor = frame_trunk_vmem_bytes(4, 4, halo=halo)
+    with pytest.raises(ValueError, match="VMEM budget"):
+        choose_tile(H, W, halo=halo, budget=floor - 1)
+
+
+@hp.given(halo=_halo)
+@hp.settings(max_examples=20, deadline=None)
+def test_vmem_model_monotone(halo):
+    """Bigger tiles and wider halos never claim less VMEM — the budget
+    check cannot be gamed by the chooser's scan order."""
+    for th, tw in ((4, 4), (8, 8), (16, 8), (64, 64), (256, 128)):
+        assert (frame_trunk_vmem_bytes(th, tw, halo=halo)
+                <= frame_trunk_vmem_bytes(2 * th, tw, halo=halo))
+        assert (frame_trunk_vmem_bytes(th, tw, halo=halo)
+                <= frame_trunk_vmem_bytes(th, 2 * tw, halo=halo))
+        assert (frame_trunk_vmem_bytes(th, tw, halo=halo)
+                <= frame_trunk_vmem_bytes(th, tw, halo=halo + 1))
+
+
+@hp.given(H=st.sampled_from([4, 8, 12, 16]), W=st.sampled_from([4, 8, 12, 16]),
+          fmt=st.sampled_from(["q16_16", "q8_8"]), seed=st.integers(0, 2**16))
+@hp.settings(max_examples=25, deadline=None)
+def test_single_tile_degenerate_matches_fixed_conv2d(H, W, fmt, seed):
+    """tile == frame: no halo/seam/DMA arithmetic in play, so the interior
+    map must be exactly two composed fused fixed_conv2d stages."""
+    cfg = fxp.Q16_16 if fmt == "q16_16" else fxp.Q8_8
+    rng = np.random.default_rng(seed)
+    x = random_words(rng, (H, W), cfg)
+    w1, b1 = random_words(rng, (4,), cfg), random_words(rng, (1,), cfg)
+    w2, b2 = random_words(rng, (4,), cfg), random_words(rng, (1,), cfg)
+    quad = frame_trunk_quad(jnp.asarray(x, jnp.int32), w1, b1, w2, b2,
+                            cfg=cfg, tile=(H, W))
+    s1 = fixed_conv2d(jnp.asarray(x, jnp.int32)[None], jnp.asarray(w1),
+                      jnp.asarray(b1), cfg=cfg, activation="plan", pool=True)
+    s2 = fixed_conv2d(s1, jnp.asarray(w2), jnp.asarray(b2), cfg=cfg,
+                      activation="plan", pool=True)
+    np.testing.assert_array_equal(
+        np.asarray(quad[0], np.int64), np.asarray(s2[0], np.int64),
+        err_msg=f"{fmt}/{H}x{W}: single-tile interior drifted from the "
+                f"per-stage fixed_conv2d composition")
