@@ -1,0 +1,236 @@
+"""Goodput under a latency SLO, per serving topology, per arrival process.
+
+FPS on a paced clip says nothing about overload: the north-star question is
+how much *useful* work the stack completes when requests arrive on the
+users' clock — goodput = fraction of SUBMITTED requests answered within
+their deadline (sheds and late answers both count against it).
+
+For each serving topology this table:
+
+  1. calibrates the topology's service capacity (drain a full backlog,
+     read the busy-time service rate — idle never deflates it),
+  2. replays seeded open-loop arrival schedules (`streaming/loadgen.py`:
+     Poisson / bursty / diurnal) at offered loads of 0.5x and 2.0x that
+     capacity — same request count per row, so wall time is load-invariant,
+  3. reports goodput, shed counts per reason, latency percentiles, and the
+     accounting invariant `submitted == served + shed` per row.
+
+Topologies: a single continuous-batching `VisionEngine` on the float ref
+and fused fixed-point Pallas substrates (admission bound `max_queue`,
+per-request deadlines), and a 2-replica `ReplicaRouter` under the
+SLO-aware policy (projected-wait dispatch, door shedding).
+
+`--smoke` is the CI gate (Poisson + bursty):
+  - every row's ledger reconciles (engine AND fleet level),
+  - the 2.0x rows shed (overload must engage admission control — a queue
+    that never sheds is an unbounded queue),
+  - queue high-water stays within the admission bound,
+  - goodput is monotone in offered-load headroom (0.5x >= 2.0x per
+    topology/process).
+
+    PYTHONPATH=src python -m benchmarks.goodput_table --smoke
+    PYTHONPATH=src python -m benchmarks.goodput_table --full   # + diurnal
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _params():
+    from benchmarks.stream_table import _params as p
+    return p()
+
+
+SEED = 7
+BATCH = 32
+QUEUE_BOUND = 4          # max_queue = QUEUE_BOUND * batch_size
+FLOOR_MS = 10.0          # per-step service-time floor: a deterministic rate
+                         # limiter (capacity ~= batch/floor) so the open-loop
+                         # rows measure serving DISCIPLINE, not host speed —
+                         # on real hardware run with --floor-ms 0
+LOADS = {"0.5x": 0.5, "2.0x": 2.0}
+SMOKE_PROCESSES = ("poisson", "bursty")
+
+
+def _deadline_ms(capacity_qps: float, batch: int) -> float:
+    """SLO for a topology: ~6 batch-service-times (comfortable at half
+    load, hopeless for a 2x backlog), floored so scheduler jitter on a
+    fast machine can't dominate."""
+    return max(25.0, 6.0 * batch / capacity_qps * 1e3)
+
+
+def _calibrate_engine(params, backend: str, batch: int,
+                      floor_s: float) -> float:
+    """Busy-time service rate (qps) of one engine draining a full backlog
+    of 8 batches — the capacity the offered loads are scaled against.
+    With a service floor this converges to batch/floor_s by construction."""
+    import numpy as np
+
+    from repro.serving.vision_engine import VisionEngine
+
+    eng = VisionEngine(params, backend=backend, batch_size=batch,
+                      min_step_s=floor_s)
+    imgs = np.zeros((8 * batch, 28, 28, 1), np.float32)
+    eng.submit_many(imgs)
+    eng.run()
+    rate = eng.service_rate_qps()
+    assert rate is not None and rate > 0
+    return rate
+
+
+def _run_engine_row(params, backend: str, gen, images, slo_ms: float,
+                    floor_s: float) -> dict:
+    from repro.serving.vision_engine import VisionEngine
+
+    eng = VisionEngine(params, backend=backend, batch_size=BATCH,
+                       max_queue=QUEUE_BOUND * BATCH, min_step_s=floor_s)
+    eng.start()
+    try:
+        gen.replay(lambda a, t: eng.submit(images[a.uid], deadline_ms=slo_ms,
+                                           t_submit=t))
+    finally:
+        eng.stop(drain=True)
+    s = eng.stats()
+    s["queue_bound"] = QUEUE_BOUND * BATCH
+    return s
+
+
+def _run_router_row(params, gen, images, slo_ms: float,
+                    floor_s: float) -> dict:
+    from repro.serving.router import ReplicaRouter
+
+    router = ReplicaRouter.from_backends(
+        params, ["ref", "ref"], batch_size=BATCH // 2, policy="slo",
+        slo_ms=slo_ms, engine_kw={"max_queue": QUEUE_BOUND * BATCH,
+                                  "min_step_s": floor_s})
+    router.start()
+    try:
+        gen.replay(lambda a, t: router.submit(images[a.uid], t_submit=t))
+    finally:
+        router.stop(drain=True)
+    s = router.stats()
+    s["queue_bound"] = QUEUE_BOUND * BATCH
+    return s
+
+
+def measure(*, processes, n_requests: int, topologies=None,
+            floor_s: float = FLOOR_MS / 1e3) -> list[dict]:
+    """All (topology, process, load) rows.  Per row: a fresh engine/fleet,
+    a seeded open-loop replay, and the stats ledger."""
+    from repro.streaming.loadgen import LoadGen
+
+    params = _params()
+    topo_caps = {}
+    topo_caps["engine_ref"] = _calibrate_engine(params, "ref", BATCH,
+                                                floor_s)
+    topo_caps["engine_fixed_pallas"] = _calibrate_engine(
+        params, "fixed_pallas", BATCH, floor_s)
+    # 2 replicas at half batch each: fleet capacity ~= one full-batch engine
+    topo_caps["router_slo_x2"] = 2 * _calibrate_engine(params, "ref",
+                                                       BATCH // 2, floor_s)
+    if topologies is not None:
+        topo_caps = {k: v for k, v in topo_caps.items() if k in topologies}
+
+    rows = []
+    for topo, cap in topo_caps.items():
+        slo_ms = _deadline_ms(cap, BATCH)
+        for process in processes:
+            for load_name, factor in LOADS.items():
+                rate = factor * cap
+                gen = LoadGen(process=process, rate_qps=rate,
+                              n_requests=n_requests, n_streams=4, seed=SEED)
+                images = gen.images()      # render off the serving clock
+                if topo == "router_slo_x2":
+                    s = _run_router_row(params, gen, images, slo_ms, floor_s)
+                elif topo.startswith("engine_"):
+                    s = _run_engine_row(params, topo[len("engine_"):],
+                                        gen, images, slo_ms, floor_s)
+                else:
+                    raise ValueError(topo)
+                rows.append({
+                    "topology": topo, "process": process, "load": load_name,
+                    "capacity_qps": cap, "offered_qps": gen.offered_qps,
+                    "slo_ms": slo_ms, "stats": s,
+                })
+    return rows
+
+
+def gate(rows: list[dict]) -> list[str]:
+    """The --smoke CI conditions over a measured row set."""
+    failures = []
+    goodput = {}
+    for r in rows:
+        s = r["stats"]
+        tag = f"{r['topology']}/{r['process']}/{r['load']}"
+        if not s["accounted"]:
+            failures.append(
+                f"{tag}: ledger does not reconcile: submitted="
+                f"{s['submitted']} served={s['n']} shed={s['shed']} "
+                f"pending={s['pending']}")
+        for rep in s.get("per_replica", []):
+            if not rep["accounted"]:
+                failures.append(f"{tag}: replica-level ledger does not "
+                                f"reconcile: {rep['shed_by_reason']}")
+        if "goodput" not in s:
+            failures.append(f"{tag}: no goodput reported")
+            continue
+        goodput[(r["topology"], r["process"], r["load"])] = s["goodput"]
+        hwm = s.get("queue_hwm", 0)
+        if isinstance(hwm, (int, float)) and hwm > s["queue_bound"]:
+            failures.append(f"{tag}: queue high-water {hwm} exceeded the "
+                            f"admission bound {s['queue_bound']}")
+        if r["load"] == "2.0x" and s["shed"] == 0:
+            failures.append(
+                f"{tag}: no shedding under 2x-capacity offered load — "
+                f"admission control never engaged (unbounded queue?)")
+    for (topo, proc, load), g_hi in goodput.items():
+        if load != "2.0x":
+            continue
+        g_lo = goodput.get((topo, proc, "0.5x"))
+        if g_lo is not None and g_lo < g_hi:
+            failures.append(
+                f"{topo}/{proc}: goodput not monotone in headroom: "
+                f"0.5x={g_lo:.3f} < 2.0x={g_hi:.3f}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small row set + CI gates (nonzero exit on fail)")
+    ap.add_argument("--full", action="store_true",
+                    help="all three arrival processes, bigger schedules")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="arrivals per row (default: 1500 smoke / 4000 full)")
+    ap.add_argument("--floor-ms", type=float, default=FLOOR_MS,
+                    help="per-step service floor; 0 = raw hardware capacity")
+    args = ap.parse_args()
+
+    from repro.streaming.loadgen import PROCESSES
+    processes = PROCESSES if args.full else SMOKE_PROCESSES
+    n = args.requests or (4000 if args.full else 1500)
+    rows = measure(processes=processes, n_requests=n,
+                   floor_s=args.floor_ms / 1e3)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        s = r["stats"]
+        print(f"goodput/{r['topology']}_{r['process']}_{r['load']},,"
+              f"goodput={s.get('goodput', 0.0):.3f} "
+              f"submitted={s['submitted']} served={s['n']} shed={s['shed']} "
+              f"offered_qps={r['offered_qps']:.0f} "
+              f"capacity_qps={r['capacity_qps']:.0f} "
+              f"slo_ms={r['slo_ms']:.1f} "
+              f"p99_ms={s.get('latency_p99_ms', 0.0):.2f} "
+              f"shed_by={s['shed_by_reason']}")
+
+    failures = gate(rows) if args.smoke else []
+    for f in failures:
+        print(f"goodput/FAIL,,{f}")
+    print(f"goodput/result,,{'FAIL' if failures else 'OK'}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -146,14 +146,23 @@ def measure() -> dict:
 
 def check(ledger: dict, fresh: dict) -> list[str]:
     """Regression gates: committed launch topology must match the fresh
-    static counts EXACTLY; the in-run megakernel-vs-composed FPS ratio must
-    hold the band.  (Committed FPS is a record, not a gate — absolute rates
-    are machine-dependent.)"""
+    static counts EXACTLY — in BOTH directions: a fresh row missing from
+    the ledger fails, and a committed row missing from the fresh sweep
+    fails too (a backend or route silently dropped from the measurement is
+    exactly the regression this gate exists to catch).  The in-run
+    megakernel-vs-composed FPS ratio must hold the band.  (Committed FPS
+    is a record, not a gate — absolute rates are machine-dependent.)"""
     failures = []
     if ledger.get("config") != fresh["config"]:
         failures.append(f"ledger config drifted: committed "
                         f"{ledger.get('config')} vs {fresh['config']}")
         return failures
+    for name, routes in ledger.get("rows", {}).items():
+        for route in routes:
+            if fresh["rows"].get(name, {}).get(route) is None:
+                failures.append(
+                    f"committed row {name}/{route} vanished from the fresh "
+                    f"measurement (backend/route dropped from the sweep?)")
     for name, routes in fresh["rows"].items():
         for route, row in routes.items():
             committed = ledger["rows"].get(name, {}).get(route)

@@ -1,29 +1,54 @@
-"""Replica router: fleet-level serving over N vision engines.
+"""Replica router: SLO-aware fleet-level serving over N vision engines.
 
 The survey line of FPGA accelerator work (Guo et al.; ZynqNet) scales
 throughput by REPLICATING the compute unit and partitioning the data path;
 `VisionEngine` already scales one step across a mesh, and this module adds
 the second axis: a router that owns several engines ("replicas" — distinct
-backends, devices, or mesh slices), dispatches each incoming request to the
-least-loaded healthy replica, drains all replicas concurrently, and
-aggregates per-replica stats into fleet-level throughput and latency
-percentiles.
+backends, devices, or mesh slices), dispatches each incoming request to a
+replica, drains all replicas concurrently, and aggregates per-replica stats
+into fleet-level throughput, latency percentiles, and goodput.
+
+Dispatch policies:
+
+  least_loaded  shallowest lane+queue (depth only)
+  round_robin   rotate over the healthy set
+  slo           minimum PROJECTED WAIT — per-replica depth divided by the
+                replica's OBSERVED service rate (`service_rate_qps()`, qps
+                over busy time; cold replicas borrow the fleet median), so
+                a slow replica with a short queue loses to a fast replica
+                with a longer one.  When even the best projected wait
+                exceeds the request's deadline headroom the request is SHED
+                at the door (reason "slo_wait") instead of being queued to
+                blow the p99 — goodput over graveyard latency.
+
+Every request can carry a deadline (default: the router's `slo_ms`); sheds
+— at the router door or inside an engine (admission bound, expired
+deadline) — are counted per reason, and the fleet ledger mirrors the
+engine's:  submitted == served + shed + pending  (stats()["accounted"]).
 
 Dispatch is deferred: `submit()` assigns a request to a replica's pending
 lane immediately (so queue depths — the load signal — are visible), but the
 images only enter the engine's own queue inside `run()`.  That makes
 failover clean: if a replica dies mid-drain (its jitted step raises), the
 router collects whatever that engine already completed, re-dispatches the
-unserved remainder across the survivors (re-arming drained survivors via
-`VisionEngine.reopen`), and only raises if NO replica is left healthy.  One
-bad backend never poisons the fleet.
+unserved remainder across the survivors, and only raises if NO replica is
+left healthy.  One bad backend never poisons the fleet.
+
+Elastic scaling: construct with `spawn=` (a zero-arg engine factory) and
+call `autoscale()` between waves — or `start()` the serving thread, which
+drains continuously and autoscales by itself.  Scale-up triggers when the
+fleet's backlog exceeds `scale_up_depth` waves of capacity; scale-down
+retires the idlest replica after `scale_down_idle` consecutive idle checks
+(never below `min_replicas`; retired replicas stay in `replicas` so
+indices — and per-replica stats — remain stable).
 
 Usage:
 
-    router = ReplicaRouter.from_backends(params, ["pallas", "fixed_pallas"])
+    router = ReplicaRouter.from_backends(params, ["pallas", "fixed_pallas"],
+                                         policy="slo", slo_ms=50)
     uids = [router.submit(img) for img in images]
     router.run()                       # concurrent drain + failover
-    res = router.results()             # uid -> RoutedResult
+    res = router.pop_results(uids)     # uid -> RoutedResult
     print(router.stats())              # fleet + per-replica
 """
 from __future__ import annotations
@@ -32,7 +57,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Iterable, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
@@ -66,91 +91,169 @@ class _Pending:
     uid: int
     image: np.ndarray
     t_submit: float
+    deadline_ms: float | None = None
 
 
 class ReplicaRouter:
-    """Least-loaded request router over a fleet of `VisionEngine` replicas."""
+    """SLO-aware request router over an elastic fleet of `VisionEngine`s."""
 
-    POLICIES = ("least_loaded", "round_robin")
+    POLICIES = ("least_loaded", "round_robin", "slo")
 
     def __init__(self, replicas: Sequence[VisionEngine], *,
-                 policy: str = "least_loaded"):
+                 policy: str = "least_loaded", slo_ms: float | None = None,
+                 shed_headroom: float = 1.0,
+                 spawn: Callable[[], VisionEngine] | None = None,
+                 min_replicas: int = 1, max_replicas: int | None = None,
+                 scale_up_depth: float = 2.0, scale_down_idle: int = 3):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {self.POLICIES}")
         self.replicas = list(replicas)
         self.policy = policy
+        self.slo_ms = None if slo_ms is None else float(slo_ms)
+        self.shed_headroom = float(shed_headroom)
+        self._spawn = spawn
+        self.min_replicas = int(min_replicas)
+        self.max_replicas = None if max_replicas is None else int(max_replicas)
+        self.scale_up_depth = float(scale_up_depth)
+        self.scale_down_idle = int(scale_down_idle)
         self._pending: list[list[_Pending]] = [[] for _ in self.replicas]
         self._errors: dict[int, BaseException] = {}
+        self._retired: set[int] = set()
         self._results: dict[int, RoutedResult] = {}
-        self._assignment: dict[int, int] = {}      # uid -> replica index
+        self._assignment: dict[int, int] = {}      # uid -> replica (pending)
+        self._shed: dict[int, str] = {}            # uid -> reason (unfetched)
+        self._shed_counts: dict[str, int] = {}
+        self._served_by: dict[int, int] = {i: 0 for i in range(len(replicas))}
+        self._latencies: list[float] = []
+        self._submitted = 0
+        self._served_total = 0
+        self._deadline_total = 0
+        self._deadline_ok = 0
+        self._idle_ticks = 0
         self._next_uid = 0
         self._rr_clock = 0
-        # reentrant: _pick (under the submit lock) reads queue_depths, which
-        # locks again for its own public callers
-        self._lock = threading.RLock()
+        self._thread: threading.Thread | None = None
+        self._stop_flag = False
+        # reentrant condition: _pick (under the submit lock) reads
+        # queue_depths, which locks again for its own public callers
+        self._lock = threading.Condition(threading.RLock())
 
     @classmethod
     def from_backends(cls, params: Any, backends: Iterable[str], *,
                       batch_size: int = 32, mesh: Any = None,
                       warmup: bool = True, policy: str = "least_loaded",
-                      **engine_kw) -> "ReplicaRouter":
+                      engine_kw: dict | None = None,
+                      **router_kw) -> "ReplicaRouter":
         """Build one replica per backend name over shared float params (each
         engine quantizes its own copy — the paper's per-substrate bake)."""
         return cls([VisionEngine(params, backend=b, batch_size=batch_size,
-                                 mesh=mesh, warmup=warmup, **engine_kw)
-                    for b in backends], policy=policy)
+                                 mesh=mesh, warmup=warmup,
+                                 **(engine_kw or {}))
+                    for b in backends], policy=policy, **router_kw)
 
     # -- request side -------------------------------------------------------
 
     def healthy_replicas(self) -> list[int]:
         # snapshot under the GIL; callers needing consistency vs concurrent
         # drains hold self._lock (as _pick/run/_redistribute do)
-        errors = set(self._errors)
-        return [i for i in range(len(self.replicas)) if i not in errors]
+        dead = set(self._errors) | self._retired
+        return [i for i in range(len(self.replicas)) if i not in dead]
 
     def queue_depths(self) -> list[int]:
-        """Per-replica load: router pending lane + engine's own queue."""
+        """Per-replica load: router pending lane + engine queue+in-flight."""
         with self._lock:
-            return [len(self._pending[i]) + self.replicas[i].queue_depth()
+            return [len(self._pending[i]) + self.replicas[i].load()
                     for i in range(len(self.replicas))]
 
-    def _pick(self) -> int:
+    def _projected_waits(self, healthy: list[int]) -> dict[int, float]:
+        """Seconds until a request dispatched NOW would be served, per
+        replica: depth / observed service rate.  Replicas with no serving
+        history borrow the fleet median rate; a fully-cold fleet projects
+        0.0 everywhere (optimistic — traffic establishes the rates)."""
+        depths = {i: len(self._pending[i]) + self.replicas[i].load()
+                  for i in healthy}
+        rates = {i: self.replicas[i].service_rate_qps() for i in healthy}
+        known = [r for r in rates.values() if r]
+        fallback = float(np.median(known)) if known else None
+        waits = {}
+        for i in healthy:
+            rate = rates[i] or fallback
+            waits[i] = depths[i] / rate if rate else 0.0
+        return waits
+
+    def _pick(self, deadline_ms: float | None = None
+              ) -> tuple[int, str | None]:
+        """(replica index, shed reason) — reason is non-None when even the
+        best replica's projected wait blows the deadline headroom."""
         healthy = self.healthy_replicas()
         if not healthy:
             raise FleetExhaustedError(
-                f"all {len(self.replicas)} replicas have failed: "
+                f"all {len(self.replicas)} replicas have failed or retired: "
                 f"{ {i: repr(e) for i, e in self._errors.items()} }")
         if self.policy == "round_robin":
             i = healthy[self._rr_clock % len(healthy)]
             self._rr_clock += 1
-            return i
+            return i, None
+        if self.policy == "least_loaded":
+            depths = self.queue_depths()
+            return min(healthy, key=lambda i: depths[i]), None
+        waits = self._projected_waits(healthy)
         depths = self.queue_depths()
-        return min(healthy, key=lambda i: depths[i])
+        i = min(healthy, key=lambda j: (waits[j], depths[j]))
+        if (deadline_ms is not None
+                and waits[i] * 1e3 > deadline_ms * self.shed_headroom):
+            return i, "slo_wait"
+        return i, None
 
-    def submit(self, image: np.ndarray) -> int:
-        """Route one image to the least-loaded healthy replica; returns a
-        fleet-global uid immediately."""
+    def submit(self, image: np.ndarray, *,
+               deadline_ms: float | None = None,
+               t_submit: float | None = None) -> int:
+        """Route one image per the dispatch policy; returns a fleet-global
+        uid immediately.  Under the "slo" policy a request the fleet cannot
+        plausibly serve in time is shed at the door (reason "slo_wait").
+        `t_submit` lets an open-loop replay harness stamp the request with
+        its scheduled arrival time (the engine deadline then counts from
+        intended arrival, not generator lag)."""
         with self._lock:
-            i = self._pick()
-            uid = self._next_uid
+            dl = deadline_ms if deadline_ms is not None else self.slo_ms
+            i, shed = self._pick(dl)   # may raise FleetExhaustedError:
+            uid = self._next_uid       # counters move only once admitted
             self._next_uid += 1
+            self._submitted += 1
+            if dl is not None:
+                self._deadline_total += 1
+            if shed is not None:
+                self._shed_uid_locked(uid, shed)
+                return uid
             self._assignment[uid] = i
+            now = (time.perf_counter() if t_submit is None
+                   else float(t_submit))
             self._pending[i].append(_Pending(
                 uid=uid, image=np.asarray(image, np.float32),
-                t_submit=time.perf_counter()))
+                t_submit=now, deadline_ms=dl))
+            self._lock.notify_all()
             return uid
 
-    def submit_many(self, images: Iterable[np.ndarray]) -> list[int]:
-        return [self.submit(img) for img in images]
+    def submit_many(self, images: Iterable[np.ndarray], *,
+                    deadline_ms: float | None = None) -> list[int]:
+        return [self.submit(img, deadline_ms=deadline_ms) for img in images]
+
+    def _shed_uid_locked(self, uid: int, reason: str) -> None:
+        self._shed[uid] = reason
+        self._shed_counts[reason] = self._shed_counts.get(reason, 0) + 1
+        self._assignment.pop(uid, None)
+        self._lock.notify_all()
 
     # -- serving side -------------------------------------------------------
 
     def _drain_replica(self, i: int) -> list[_Pending]:
         """Feed replica i its pending lane and drain it.  Returns the
         requests that did NOT complete (empty when healthy); on failure the
-        replica is marked dead and partial results are still harvested."""
+        replica is marked dead and partial results are still harvested.
+        Engine-side sheds (expired deadline, admission bound) are recorded
+        as fleet sheds, NOT failed over — their deadline already lapsed."""
         eng = self.replicas[i]
         with self._lock:              # vs concurrent submit() to this lane
             lane, self._pending[i] = self._pending[i], []
@@ -158,43 +261,64 @@ class ReplicaRouter:
             return []
         local: dict[int, _Pending] = {}
         res: dict[int, VisionResult] = {}
+        eng_shed: dict[int, str] = {}
         error: BaseException | None = None
         try:
-            if eng.drained:
-                eng.reopen()          # failover onto a finished survivor
             for p in lane:
-                local[eng.submit(p.image)] = p
+                # stamp the engine request with the ROUTER submit time so
+                # engine latency/deadlines measure what the client observes
+                local[eng.submit(p.image, deadline_ms=p.deadline_ms,
+                                 t_submit=p.t_submit)] = p
             eng.run()
-            res = eng.results()
         except Exception as e:        # noqa: BLE001 — any replica fault fails over
             error = e
-            try:
-                res = eng.results()   # harvest whatever completed pre-fault
-            except Exception:
-                res = {}
+        try:                          # harvest whatever completed pre-fault
+            res = eng.pop_results(list(local))
+            eng_shed = eng.pop_shed(list(local))
+        except Exception:
+            res, eng_shed = {}, {}
         done: set[int] = set()
-        routed = {}
+        routed: dict[int, RoutedResult] = {}
+        shed_here: dict[int, str] = {}
         for luid, p in local.items():
             r = res.get(luid)
-            if r is None:
+            if r is not None:
+                routed[p.uid] = RoutedResult(
+                    uid=p.uid, replica=i, pred=r.pred, scores=r.scores,
+                    t_submit=p.t_submit, t_done=r.t_done)
+                done.add(p.uid)
                 continue
-            routed[p.uid] = RoutedResult(
-                uid=p.uid, replica=i, pred=r.pred, scores=r.scores,
-                t_submit=p.t_submit, t_done=r.t_done)
-            done.add(p.uid)
+            reason = eng_shed.get(luid)
+            if reason is not None and reason != "fault":
+                shed_here[p.uid] = reason    # lapsed in queue: not re-run
+                done.add(p.uid)
         with self._lock:
             self._results.update(routed)
+            for uid, rr in routed.items():
+                self._served_total += 1
+                self._served_by[i] = self._served_by.get(i, 0) + 1
+                self._latencies.append(rr.latency_s)
+                self._assignment.pop(uid, None)
+            for uid, reason in shed_here.items():
+                self._shed_uid_locked(uid, reason)
+            # deadline bookkeeping needs the pending records, not the uids
+            for luid, p in local.items():
+                if p.uid in routed and p.deadline_ms is not None:
+                    rr = routed[p.uid]
+                    if rr.t_done <= p.t_submit + p.deadline_ms / 1e3:
+                        self._deadline_ok += 1
             if error is not None:
                 self._errors[i] = error
+            self._lock.notify_all()
         # unserved from the LANE (not the submitted map): a fault inside
         # eng.submit itself must not drop the never-submitted remainder
         return [p for p in lane if p.uid not in done]
 
     def run(self) -> int:
         """Drain every replica concurrently; fail unserved requests over to
-        survivors until everything is served or the fleet is exhausted.
-        Returns total #requests served this call."""
-        served_before = len(self._results)
+        survivors until everything is served (or shed) or the fleet is
+        exhausted.  Returns total #requests served this call."""
+        served_before = self._served_total
         while True:
             with self._lock:
                 # reclaim lanes stranded on dead replicas: a concurrent
@@ -202,7 +326,7 @@ class ReplicaRouter:
                 # fault is recorded — those requests must fail over too,
                 # not sit invisible on a lane nothing will ever drain
                 stranded = []
-                for i in self._errors:
+                for i in list(self._errors) + sorted(self._retired):
                     if self._pending[i]:
                         stranded.extend(self._pending[i])
                         self._pending[i] = []
@@ -217,7 +341,7 @@ class ReplicaRouter:
                 continue              # loop once more in case of re-routes
             with self._lock:
                 self._redistribute(unserved)
-        return len(self._results) - served_before
+        return self._served_total - served_before
 
     def _redistribute(self, orphans: list[_Pending]) -> None:
         """Spread failed-over requests across the survivors, shallowest lane
@@ -234,16 +358,181 @@ class ReplicaRouter:
             self._assignment[p.uid] = i
             self._pending[i].append(p)
 
-    def serve(self, images: Iterable[np.ndarray]) -> list[RoutedResult]:
+    # -- continuous serving + elastic scaling -------------------------------
+
+    def start(self) -> "ReplicaRouter":
+        """Spawn the fleet serving loop: drain whatever is pending, wave
+        after wave (continuous batching at fleet granularity — each drain
+        takes exactly what accumulated during the last), autoscaling when a
+        `spawn` factory was provided.  Idempotent."""
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stop_flag = False
+            self._thread = threading.Thread(
+                target=self._serve_loop, daemon=True, name="replica-router")
+            self._thread.start()
+        return self
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._lock:
+                has_work = any(self._pending[i]
+                               for i in self.healthy_replicas())
+                if not has_work:
+                    if self._stop_flag:
+                        return
+                    self._lock.wait(timeout=0.01)
+            if has_work:
+                try:
+                    self.run()
+                except FleetExhaustedError:
+                    with self._lock:
+                        for lane in self._pending:
+                            while lane:
+                                self._shed_uid_locked(lane.pop().uid,
+                                                      "fleet_exhausted")
+                    return
+            if self._spawn is not None:
+                self.autoscale()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the fleet serving loop (draining pending work first unless
+        `drain=False`, which sheds it)."""
+        with self._lock:
+            thread = self._thread
+            self._stop_flag = True
+            if not drain:
+                for lane in self._pending:
+                    while lane:
+                        self._shed_uid_locked(lane.pop().uid, "stopped")
+            self._lock.notify_all()
+        if thread is not None:
+            thread.join(timeout=120.0)
+            with self._lock:
+                self._thread = None
+                self._stop_flag = False
+
+    def autoscale(self) -> str | None:
+        """One elastic-sizing decision against depth + goodput signals.
+        Scale UP (via the `spawn` factory) when the fleet backlog exceeds
+        `scale_up_depth` waves of current batch capacity; RETIRE the
+        emptiest replica after `scale_down_idle` consecutive idle checks.
+        Returns "spawn:<i>" / "retire:<i>" / None.  Meant to be called from
+        one place (the serving loop or the harness) — concurrent callers
+        may overshoot the bounds by a replica."""
+        with self._lock:
+            healthy = self.healthy_replicas()
+            if not healthy:
+                return None
+            depth = sum(len(self._pending[i]) + self.replicas[i].load()
+                        for i in healthy)
+            capacity = sum(self.replicas[i].batch_size for i in healthy)
+            self._idle_ticks = self._idle_ticks + 1 if depth == 0 else 0
+            can_grow = (self._spawn is not None
+                        and (self.max_replicas is None
+                             or len(healthy) < self.max_replicas))
+            if can_grow and depth > self.scale_up_depth * capacity:
+                grow = True
+            else:
+                grow = False
+                if (len(healthy) > self.min_replicas
+                        and self._idle_ticks >= self.scale_down_idle):
+                    i = min(healthy,
+                            key=lambda j: len(self._pending[j])
+                            + self.replicas[j].load())
+                    if not self._pending[i] and self.replicas[i].load() == 0:
+                        self._retired.add(i)
+                        self._idle_ticks = 0
+                        self.replicas[i].stop(drain=True)
+                        return f"retire:{i}"
+                return None
+        eng = self._spawn()           # build OUTSIDE the lock: warmup compiles
+        with self._lock:
+            self.replicas.append(eng)
+            self._pending.append([])
+            i = len(self.replicas) - 1
+            self._served_by.setdefault(i, 0)
+            self._idle_ticks = 0
+            return f"spawn:{i}"
+
+    # -- client loop --------------------------------------------------------
+
+    def wait(self, uids: Iterable[int], timeout: float | None = None) -> None:
+        """Block until every uid is resolved (served or shed).  With the
+        serving thread running this waits on its completions; without it,
+        pending waves are drained inline via run()."""
+        uids = list(uids)
+
+        def unresolved_locked():
+            return [u for u in uids
+                    if u not in self._results and u not in self._shed]
+
+        if self._thread is None:
+            while True:
+                with self._lock:
+                    missing = unresolved_locked()
+                    if not missing:
+                        return
+                    pending = sum(len(lane) for lane in self._pending)
+                if pending == 0:
+                    raise KeyError(
+                        f"uids {missing[:4]} are not pending, served, or "
+                        "shed — were their results already popped?")
+                self.run()
+            return
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            while unresolved_locked():
+                remaining = (None if t_end is None
+                             else t_end - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{len(unresolved_locked())} of {len(uids)} requests "
+                        f"unresolved after {timeout}s")
+                self._lock.wait(remaining if remaining is not None else 0.1)
+
+    def pop_results(self, uids: Iterable[int] | None = None
+                    ) -> dict[int, RoutedResult]:
+        """Hand over (and forget) completed results — bounded retention at
+        fleet level (assignment records go with them)."""
+        with self._lock:
+            if uids is None:
+                out, self._results = self._results, {}
+                self._assignment = {u: i for u, i in self._assignment.items()
+                                    if u not in out}
+                return out
+            out = {}
+            for u in list(uids):
+                if u in self._results:
+                    out[u] = self._results.pop(u)
+                    self._assignment.pop(u, None)
+            return out
+
+    def pop_shed(self, uids: Iterable[int] | None = None) -> dict[int, str]:
+        """Hand over (and forget) shed records (uid -> reason)."""
+        with self._lock:
+            if uids is None:
+                out, self._shed = self._shed, {}
+                return out
+            return {u: self._shed.pop(u) for u in list(uids)
+                    if u in self._shed}
+
+    def serve(self, images: Iterable[np.ndarray], *,
+              deadline_ms: float | None = None
+              ) -> list["RoutedResult | None"]:
         """Submit a workload, drain the fleet, return results in submission
-        order."""
-        uids = self.submit_many(images)
-        self.run()
-        return [self._results[u] for u in uids]
+        order (None where a request was shed)."""
+        uids = self.submit_many(images, deadline_ms=deadline_ms)
+        self.wait(uids)
+        res = self.pop_results(uids)
+        self.pop_shed(uids)
+        return [res.get(u) for u in uids]
 
     # -- reporting ----------------------------------------------------------
 
     def results(self) -> dict[int, RoutedResult]:
+        """Currently-retained (not yet popped) results."""
         with self._lock:
             return dict(self._results)
 
@@ -252,23 +541,45 @@ class ReplicaRouter:
             return dict(self._errors)
 
     def stats(self) -> dict:
-        """Fleet-level latency/throughput + the per-replica engine stats."""
+        """Fleet-level goodput/latency/throughput + per-replica engine
+        stats.  Fleet throughput is the SUM of per-replica observed service
+        rates (replicas serve in parallel), each measured over that
+        replica's busy time — idle gaps never deflate it."""
         with self._lock:
-            res = list(self._results.values())
+            shed_total = sum(self._shed_counts.values())
+            # lanes (incl. ones stranded on dead replicas — run() reclaims
+            # those) + live engines' queues.  A DEAD replica's engine queue
+            # is excluded: whatever it still holds was already failed over.
+            pending = (sum(len(lane) for lane in self._pending)
+                       + sum(self.replicas[i].load()
+                             for i in range(len(self.replicas))
+                             if i not in self._errors))
             failed = sorted(self._errors)
-        per_replica = [eng.stats() for eng in self.replicas]
-        out = {
-            "replicas": len(self.replicas),
-            "healthy": len(self.replicas) - len(failed),
-            "failed": failed,
-            "policy": self.policy,
-            "n": len(res),
-            "per_replica": per_replica,
-            "served_by": {i: sum(1 for r in res if r.replica == i)
-                          for i in range(len(self.replicas))},
-        }
-        if not res:
+            out = {
+                "replicas": len(self.replicas),
+                "healthy": len(self.healthy_replicas()),
+                "retired": sorted(self._retired),
+                "failed": failed,
+                "policy": self.policy,
+                "slo_ms": self.slo_ms,
+                "n": self._served_total,
+                "submitted": self._submitted,
+                "shed": shed_total,
+                "shed_by_reason": dict(sorted(self._shed_counts.items())),
+                "pending": pending,
+                # the fleet-level no-silent-loss invariant
+                "accounted": self._submitted
+                == self._served_total + shed_total + pending,
+                "per_replica": [eng.stats() for eng in self.replicas],
+                "served_by": dict(sorted(self._served_by.items())),
+            }
+            if self._deadline_total:
+                out["deadline_total"] = self._deadline_total
+                out["served_within_deadline"] = self._deadline_ok
+                out["goodput"] = self._deadline_ok / self._deadline_total
+            if self._served_total:
+                busy = sum(r["busy_s"] for r in out["per_replica"])
+                out.update(latency_stats(self._latencies, busy))
+                rates = [eng.service_rate_qps() for eng in self.replicas]
+                out["throughput_qps"] = float(sum(r for r in rates if r))
             return out
-        wall = max(r.t_done for r in res) - min(r.t_submit for r in res)
-        out.update(latency_stats([r.latency_s for r in res], wall))
-        return out

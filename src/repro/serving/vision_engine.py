@@ -1,12 +1,35 @@
-"""Streaming vision serving engine: async single-image requests, batched steps.
+"""Streaming vision serving engine: continuous batching over async requests.
 
 The TPU analogue of the paper's deployment loop — there, pixels stream from
 the PS over a DMA-FIFO into the fabric and classifications stream back; here,
-single-image classification requests stream into a queue, the engine
-coalesces them into FIXED-SIZE padded batches (one compiled program, no
-recompilation churn — the FIFO depth is the batch size), runs one jitted
-step of `smallnet.apply` on any registered backend, and streams per-request
-results back with latency accounting.
+single-image classification requests stream into a queue and every `step()`
+forms one batch from WHATEVER is queued at that instant (continuous
+batching: no wave boundaries, no drain/reopen churn), zero-pads it to the
+engine's fixed `batch_size` (one compiled program, no recompilation churn —
+the FIFO depth is the batch size), runs one jitted step of `smallnet.apply`
+on any registered backend, and streams per-request results back with latency
+accounting.
+
+Under real load the engine is also the ADMISSION CONTROLLER: `max_queue`
+bounds the intake (an arrival past the bound is shed immediately, reason
+"queue_depth"), `max_age_ms` and per-request deadlines shed stale requests
+at batch-forming time (reasons "age"/"deadline"), and a faulted step sheds
+its batch (reason "fault") instead of losing it.  Every shed is counted per
+reason and the pipeline's no-silent-loss invariant extends to the engine:
+
+    submitted == served + shed + pending        (stats()["accounted"])
+
+Serving runs either synchronously (`step()`/`run()` on the caller's thread)
+or continuously (`start()` spawns a serving thread that batches whatever
+arrives; `submit()` + `wait()` + `pop_results()` is the client loop —
+`serve()` wraps all three).  Results are handed over by `pop_results()`, so
+memory stays O(inflight), not O(stream length); latency/throughput stats
+accumulate in O(1)-per-request accumulators independent of retention.
+
+Throughput is reported over BUSY time (the sum of per-step serving windows),
+not the submit-to-done wall clock, so an engine reused across separated
+bursts reports its real service rate instead of one deflated by idle gaps —
+`service_rate_qps()` is the router's load signal.
 
 Pass a `jax.sharding.Mesh` and the jitted step shards the batch dim across
 the mesh's data axes (the vision rules preset in `distributed/sharding.py`):
@@ -16,29 +39,26 @@ degenerates to the unsharded program — same engine code on a laptop CPU and
 a pod slice.  For scaling across *separate* engines (distinct backends or
 mesh slices) see `serving/router.py`.
 
-Lifecycle: `submit()`/`step()` interleave freely; `run()` drains the queue
-and CLOSES the intake — a submit after the drain raises `EngineDrainedError`
-instead of silently queueing a request nothing will ever serve (the stats
-window is also frozen at drain time).  `reopen()` explicitly re-arms the
-engine for another serving wave (the replica router uses this to fail
-requests over onto survivors).
-
 Sibling of `serving/engine.py` (the LM continuous-batching engine); this one
 is the image-classification half of the serving story.
 
 Usage:
 
-    eng = VisionEngine(params, backend="pallas", batch_size=32)
-    uids = [eng.submit(img) for img in images]       # async: queue only
-    eng.run()                                        # drain in batched steps
-    res = eng.results()                              # uid -> VisionResult
-    print(eng.stats())                               # latency + throughput
+    eng = VisionEngine(params, backend="pallas", batch_size=32,
+                       max_queue=128)
+    eng.start()                                      # continuous batching
+    uids = [eng.submit(img, deadline_ms=50) for img in images]
+    eng.wait(uids)
+    res = eng.pop_results(uids)                      # uid -> VisionResult
+    print(eng.stats())                               # latency + goodput
+    eng.stop()
 """
 from __future__ import annotations
 
 import collections
 import contextlib
 import dataclasses
+import threading
 import time
 from typing import Any, Iterable
 
@@ -53,23 +73,31 @@ from repro.core import smallnet
 from repro.distributed import sharding as shd
 
 
-def latency_stats(latencies_s, wall_s: float) -> dict:
+def latency_stats(latencies_s, window_s: float) -> dict:
     """The shared latency/throughput block of engine AND fleet stats():
-    mean/p50/p95/max in ms + wall-clock qps over `wall_s` seconds."""
-    lat = np.asarray(latencies_s)
+    mean/p50/p95/p99/max in ms + qps over the `window_s`-second serving
+    window.  A zero-length window yields 0.0 qps (a single instantaneous
+    batch has no measurable rate — never inf); an empty latency set raises
+    (callers must guard the n == 0 case explicitly)."""
+    lat = np.asarray(latencies_s, np.float64)
+    if lat.size == 0:
+        raise ValueError(
+            "latency_stats: empty latency set — an all-shed or never-run "
+            "window has no latency distribution; guard n == 0 at the caller")
     return {
         "latency_mean_ms": float(lat.mean() * 1e3),
         "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
         "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
+        "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
         "latency_max_ms": float(lat.max() * 1e3),
-        "throughput_qps": float(len(lat) / wall_s) if wall_s > 0 else float("inf"),
+        "throughput_qps": float(lat.size / window_s) if window_s > 0 else 0.0,
     }
 
 
-class EngineDrainedError(RuntimeError):
-    """submit() after run() has drained the queue: the serving wave is over
-    and nothing would ever serve the request.  Call `reopen()` (or build a
-    fresh engine) to start another wave."""
+class EngineFaultError(RuntimeError):
+    """The serving thread died: the jitted step raised.  Queued and future
+    submits are shed with reason "fault" (accounting still reconciles); the
+    original exception is chained as __cause__."""
 
 
 @dataclasses.dataclass
@@ -77,6 +105,7 @@ class VisionRequest:
     uid: int
     image: np.ndarray                 # (28, 28, 1) float32
     t_submit: float = 0.0
+    deadline: float | None = None     # absolute perf_counter time, or None
 
 
 @dataclasses.dataclass
@@ -87,36 +116,61 @@ class VisionResult:
     t_submit: float
     t_done: float
     batch_index: int                  # which engine step served it
+    deadline: float | None = None     # absolute deadline it was held to
 
     @property
     def latency_s(self) -> float:
         """Queue wait + batch compute (what the client observes)."""
         return self.t_done - self.t_submit
 
+    @property
+    def within_deadline(self) -> bool:
+        """True when served in time (vacuously true without a deadline)."""
+        return self.deadline is None or self.t_done <= self.deadline
+
 
 class VisionEngine:
-    """Batched streaming classifier over any registered smallNet backend.
+    """Continuously-batched streaming classifier over any smallNet backend.
 
-    Requests submitted via `submit()` queue up; each `step()` pops up to
-    `batch_size` of them, zero-pads to exactly `batch_size` (static shape ->
-    a single XLA executable per engine), runs the jitted forward, and
-    timestamps completions after `block_until_ready` so reported latency is
-    honest wall clock.
+    Requests submitted via `submit()` queue up (or are shed at the
+    admission bound); each `step()` pops up to `batch_size` of them —
+    shedding any whose deadline/age already expired — zero-pads to exactly
+    `batch_size` (static shape -> a single XLA executable per engine), runs
+    the jitted forward, and timestamps completions after
+    `block_until_ready` so reported latency is honest wall clock.
 
     With `mesh=` the step is traced under the vision sharding rules and the
     batch axis is split across the mesh (batch_size is rounded UP to the
     nearest multiple of the mesh batch axes so every device gets equal full
     shards).  The ambient mesh context is part of jax's jit cache key on
     the versions we support, so the engine re-enters it around every step.
+
+    Thread model: all bookkeeping lives under one condition variable; the
+    jitted compute runs outside it, so submitters never block on the
+    accelerator.  `start()`/`stop()` run the step loop on a daemon thread
+    (continuous batching); without it, `step()`/`run()`/`wait()` drive
+    serving synchronously on the caller's thread.
     """
 
     def __init__(self, params: Any, *, backend: str | B.Backend = "ref",
                  batch_size: int = 32, image_shape=(28, 28, 1),
-                 warmup: bool = True, mesh: Any = None):
+                 warmup: bool = True, mesh: Any = None,
+                 max_queue: int | None = None,
+                 max_age_ms: float | None = None,
+                 default_deadline_ms: float | None = None,
+                 min_step_s: float = 0.0):
         self.backend = B.get_backend(backend)
         self.image_shape = tuple(image_shape)
         self.mesh = mesh
         self.batch_size = int(batch_size)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.max_age_ms = None if max_age_ms is None else float(max_age_ms)
+        self.default_deadline_ms = (None if default_deadline_ms is None
+                                    else float(default_deadline_ms))
+        # service-time floor per step: a deterministic rate limiter
+        # (capacity = batch_size / min_step_s) so overload harnesses can
+        # drive a known capacity regardless of host speed; 0 disables
+        self.min_step_s = float(min_step_s)
         if mesh is not None:
             mult = shd.vision_batch_multiple(mesh)
             self.batch_size = -(-self.batch_size // mult) * mult  # ceil to mult
@@ -128,14 +182,27 @@ class VisionEngine:
         # quantize once at engine build (the paper bakes weights at synthesis)
         self.params = self.backend.prepare_params(params)
         self._step_fn = self._build_step()
+        self._cond = threading.Condition()
         self._queue: collections.deque[VisionRequest] = collections.deque()
         self._results: dict[int, VisionResult] = {}
+        self._shed: dict[int, str] = {}            # uid -> reason (unfetched)
+        self._shed_counts: dict[str, int] = {}
         self._next_uid = 0
+        self._submitted = 0
+        self._served = 0
+        self._in_flight = 0
+        self._latencies: list[float] = []
+        self._deadline_total = 0                   # submits that carried one
+        self._deadline_ok = 0                      # ...served in time
         self._batches_run = 0
         self._padded_slots = 0
-        self._drained = False
+        self._busy_s = 0.0                         # sum of per-step windows
+        self._queue_hwm = 0
         self._t_first_submit: float | None = None
         self._t_last_done: float | None = None
+        self._thread: threading.Thread | None = None
+        self._stop_flag = False
+        self._fault: BaseException | None = None
         if warmup:                    # compile outside the serving clock
             zeros = jnp.zeros((self.batch_size,) + self.image_shape, jnp.float32)
             with self._mesh_ctx():
@@ -165,104 +232,333 @@ class VisionEngine:
 
     # -- request side -------------------------------------------------------
 
-    def submit(self, image: np.ndarray) -> int:
-        """Queue one image; returns its uid immediately (async)."""
-        if self._drained:
-            raise EngineDrainedError(
-                f"VisionEngine(backend={self.backend.name!r}) has drained: "
-                "run() already completed this serving wave, so this request "
-                "would queue forever.  Call reopen() for another wave or "
-                "build a fresh engine.")
+    def submit(self, image: np.ndarray, *, deadline_ms: float | None = None,
+               t_submit: float | None = None) -> int:
+        """Queue one image; returns its uid immediately (async).  A request
+        past the admission bound (or to a faulted engine) is SHED — the uid
+        resolves via `pop_shed()` instead of `pop_results()`, so accounting
+        always reconciles.  `t_submit` lets an open-loop replay harness
+        stamp the request with its scheduled arrival time (latency and
+        deadlines then measure from intended arrival, not generator lag)."""
         img = np.asarray(image, np.float32).reshape(self.image_shape)
-        uid = self._next_uid
-        self._next_uid += 1
-        now = time.perf_counter()
-        if self._t_first_submit is None:
-            self._t_first_submit = now
-        self._queue.append(VisionRequest(uid=uid, image=img, t_submit=now))
-        return uid
+        with self._cond:
+            uid = self._next_uid
+            self._next_uid += 1
+            self._submitted += 1
+            now = time.perf_counter() if t_submit is None else float(t_submit)
+            if self._t_first_submit is None:
+                self._t_first_submit = now
+            dl_ms = (deadline_ms if deadline_ms is not None
+                     else self.default_deadline_ms)
+            if dl_ms is not None:
+                self._deadline_total += 1
+            if self._fault is not None:
+                self._shed_locked(uid, "fault")
+            elif (self.max_queue is not None
+                    and len(self._queue) >= self.max_queue):
+                self._shed_locked(uid, "queue_depth")
+            else:
+                deadline = now + dl_ms / 1e3 if dl_ms is not None else None
+                self._queue.append(VisionRequest(
+                    uid=uid, image=img, t_submit=now, deadline=deadline))
+                self._queue_hwm = max(self._queue_hwm, len(self._queue))
+                self._cond.notify_all()
+            return uid
 
-    def submit_many(self, images: Iterable[np.ndarray]) -> list[int]:
-        return [self.submit(img) for img in images]
+    def submit_many(self, images: Iterable[np.ndarray], *,
+                    deadline_ms: float | None = None) -> list[int]:
+        return [self.submit(img, deadline_ms=deadline_ms) for img in images]
+
+    def _shed_locked(self, uid: int, reason: str) -> None:
+        self._shed[uid] = reason
+        self._shed_counts[reason] = self._shed_counts.get(reason, 0) + 1
+        self._cond.notify_all()
 
     # -- serving side -------------------------------------------------------
 
+    def _form_batch_locked(self) -> list[VisionRequest]:
+        """Pop up to batch_size live requests; shed expired ones in passing
+        (their deadline already lapsed or they outlived max_age_ms — serving
+        them would burn a slot on an answer nobody can use)."""
+        reqs: list[VisionRequest] = []
+        now = time.perf_counter()
+        while self._queue and len(reqs) < self.batch_size:
+            r = self._queue.popleft()
+            if r.deadline is not None and now > r.deadline:
+                self._shed_locked(r.uid, "deadline")
+            elif (self.max_age_ms is not None
+                    and (now - r.t_submit) * 1e3 > self.max_age_ms):
+                self._shed_locked(r.uid, "age")
+            else:
+                reqs.append(r)
+        return reqs
+
     def step(self) -> int:
-        """Serve one batch: coalesce up to batch_size queued requests, pad,
-        run the jitted step, record results. Returns #requests served."""
-        if not self._queue:
-            return 0
-        reqs = [self._queue.popleft()
-                for _ in range(min(self.batch_size, len(self._queue)))]
-        batch = np.zeros((self.batch_size,) + self.image_shape, np.float32)
-        for i, r in enumerate(reqs):
-            batch[i] = r.image
-        with self._mesh_ctx():
-            scores = self._step_fn(self.params, jnp.asarray(batch))
-            scores.block_until_ready()
+        """Serve one continuous batch: coalesce whatever is queued (up to
+        batch_size), pad, run the jitted step, record results. Returns
+        #requests served (sheds don't count)."""
+        with self._cond:
+            reqs = self._form_batch_locked()
+            if not reqs:
+                return 0
+            self._in_flight = len(reqs)
+        t0 = time.perf_counter()
+        try:
+            batch = np.zeros((self.batch_size,) + self.image_shape, np.float32)
+            for i, r in enumerate(reqs):
+                batch[i] = r.image
+            with self._mesh_ctx():
+                scores = self._step_fn(self.params, jnp.asarray(batch))
+                scores.block_until_ready()
+        except Exception:
+            # a faulted step sheds its batch (reason "fault") rather than
+            # losing it: submitted == served + shed + pending must survive
+            # replica death (the router treats "fault" sheds as unserved
+            # and fails them over)
+            with self._cond:
+                self._in_flight = 0
+                for r in reqs:
+                    self._shed_locked(r.uid, "fault")
+            raise
         t_done = time.perf_counter()
-        self._t_last_done = t_done
+        if self.min_step_s > 0.0 and t_done - t0 < self.min_step_s:
+            time.sleep(self.min_step_s - (t_done - t0))
+            t_done = time.perf_counter()     # the floor IS the service time
         preds = np.asarray(smallnet.predict(scores))
         scores_np = np.asarray(scores)
-        for i, r in enumerate(reqs):
-            self._results[r.uid] = VisionResult(
-                uid=r.uid, pred=int(preds[i]), scores=scores_np[i],
-                t_submit=r.t_submit, t_done=t_done,
-                batch_index=self._batches_run)
-        self._batches_run += 1
-        self._padded_slots += self.batch_size - len(reqs)
+        with self._cond:
+            self._busy_s += t_done - t0
+            self._t_last_done = t_done
+            for i, r in enumerate(reqs):
+                res = VisionResult(
+                    uid=r.uid, pred=int(preds[i]), scores=scores_np[i],
+                    t_submit=r.t_submit, t_done=t_done,
+                    batch_index=self._batches_run, deadline=r.deadline)
+                self._results[r.uid] = res
+                self._latencies.append(res.latency_s)
+                if r.deadline is not None and t_done <= r.deadline:
+                    self._deadline_ok += 1
+            self._served += len(reqs)
+            self._batches_run += 1
+            self._padded_slots += self.batch_size - len(reqs)
+            self._in_flight = 0
+            self._cond.notify_all()
         return len(reqs)
 
     def run(self) -> int:
-        """Drain the queue, then close the intake (see EngineDrainedError);
-        returns total #requests served."""
+        """Synchronously drain the current queue in continuous batches;
+        returns #requests served.  The intake stays open — submits during
+        and after the drain serve on the next step (no wave lifecycle)."""
         served = 0
-        while self._queue:
-            served += self.step()
-        self._drained = True
-        return served
+        while True:
+            n = self.step()
+            served += n
+            if n == 0:
+                with self._cond:
+                    if not self._queue:
+                        return served
 
-    def reopen(self) -> None:
-        """Re-arm a drained engine for another serving wave (results and
-        stats accumulate across waves)."""
-        self._drained = False
+    # -- continuous serving thread ------------------------------------------
+
+    def start(self) -> "VisionEngine":
+        """Spawn the continuous-batching loop: a daemon thread that forms a
+        batch from whatever is queued whenever work exists.  Idempotent."""
+        with self._cond:
+            if self._thread is not None:
+                return self
+            self._stop_flag = False
+            self._thread = threading.Thread(
+                target=self._serve_loop, daemon=True,
+                name=f"vision-engine-{self.backend.name}")
+            self._thread.start()
+        return self
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._stop_flag:
+                    self._cond.wait(timeout=0.05)
+                if self._stop_flag and not self._queue:
+                    return
+            try:
+                self.step()
+            except Exception as e:   # noqa: BLE001 — any step fault kills serving
+                with self._cond:
+                    self._fault = e
+                    while self._queue:     # nothing will ever serve these
+                        self._shed_locked(self._queue.popleft().uid, "fault")
+                    self._cond.notify_all()
+                return
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the serving thread.  `drain=True` serves what's queued
+        first; `drain=False` sheds it (reason "stopped").  No-op when no
+        thread is running."""
+        with self._cond:
+            thread = self._thread
+            self._stop_flag = True
+            if not drain:
+                while self._queue:
+                    self._shed_locked(self._queue.popleft().uid, "stopped")
+            self._cond.notify_all()
+        if thread is not None:
+            thread.join(timeout=60.0)
+            with self._cond:
+                self._thread = None
+                self._stop_flag = False
 
     @property
-    def drained(self) -> bool:
-        return self._drained
+    def started(self) -> bool:
+        return self._thread is not None
+
+    @property
+    def fault(self) -> BaseException | None:
+        return self._fault
 
     def queue_depth(self) -> int:
         return len(self._queue)
 
-    def serve(self, images: Iterable[np.ndarray]) -> list[VisionResult]:
-        """Convenience: submit a workload, drain it, return results in
-        submission order."""
-        uids = self.submit_many(images)
-        self.run()
-        return [self._results[u] for u in uids]
+    def load(self) -> int:
+        """Queued + in-flight requests: the router's depth signal."""
+        with self._cond:
+            return len(self._queue) + self._in_flight
+
+    # -- client loop --------------------------------------------------------
+
+    def wait(self, uids: Iterable[int], timeout: float | None = None) -> None:
+        """Block until every uid is resolved (served or shed).  With the
+        serving thread running this waits on its completions; without it,
+        serving is driven inline on the caller's thread."""
+        uids = list(uids)
+
+        def unresolved_locked():
+            return [u for u in uids
+                    if u not in self._results and u not in self._shed]
+
+        if self._thread is None:
+            while True:
+                with self._cond:
+                    missing = unresolved_locked()
+                    if not missing:
+                        return
+                if self.step() == 0:
+                    with self._cond:
+                        missing = unresolved_locked()
+                        if missing and not self._queue and not self._in_flight:
+                            raise KeyError(
+                                f"uids {missing[:4]} are not queued, served, "
+                                "or shed — were their results already "
+                                "popped by another caller?")
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            while unresolved_locked():
+                if self._fault is not None:
+                    # the serving thread is dead and shed everything it
+                    # knew about — what's still unresolved never will be
+                    raise EngineFaultError(
+                        f"serving thread died; {len(unresolved_locked())} "
+                        "uids will never resolve") from self._fault
+                remaining = (None if t_end is None
+                             else t_end - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{len(unresolved_locked())} of {len(uids)} requests "
+                        f"unresolved after {timeout}s")
+                self._cond.wait(remaining if remaining is not None else 0.1)
+
+    def pop_results(self, uids: Iterable[int] | None = None
+                    ) -> dict[int, VisionResult]:
+        """Hand over (and forget) completed results — the bounded-retention
+        contract: a pipeline popping per wave keeps the engine's resident
+        result set O(batch) over an unbounded stream.  `None` pops all."""
+        with self._cond:
+            if uids is None:
+                out, self._results = self._results, {}
+                return out
+            return {u: self._results.pop(u) for u in list(uids)
+                    if u in self._results}
+
+    def pop_shed(self, uids: Iterable[int] | None = None) -> dict[int, str]:
+        """Hand over (and forget) shed records (uid -> reason).  Aggregate
+        per-reason counts in stats() are unaffected."""
+        with self._cond:
+            if uids is None:
+                out, self._shed = self._shed, {}
+                return out
+            return {u: self._shed.pop(u) for u in list(uids)
+                    if u in self._shed}
+
+    def serve(self, images: Iterable[np.ndarray], *,
+              deadline_ms: float | None = None
+              ) -> list["VisionResult | None"]:
+        """Convenience client loop: submit a workload, wait for it, pop the
+        results, return them in submission order (None where a request was
+        shed).  Works with or without the serving thread."""
+        uids = self.submit_many(images, deadline_ms=deadline_ms)
+        self.wait(uids)
+        res = self.pop_results(uids)
+        self.pop_shed(uids)
+        return [res.get(u) for u in uids]
 
     # -- reporting ----------------------------------------------------------
 
     def results(self) -> dict[int, VisionResult]:
-        return dict(self._results)
+        """Currently-retained (not yet popped) results."""
+        with self._cond:
+            return dict(self._results)
+
+    def service_rate_qps(self) -> float | None:
+        """Observed service rate: requests served per second of BUSY time
+        (idle gaps excluded).  None before any serving history exists —
+        the router's dispatch falls back to fleet statistics then."""
+        with self._cond:
+            if self._busy_s <= 0 or self._served == 0:
+                return None
+            return self._served / self._busy_s
 
     def stats(self) -> dict:
-        """Per-request latency distribution + engine throughput."""
-        res = list(self._results.values())
-        if not res:
-            return {"backend": self.backend.name, "n": 0}
-        wall = (self._t_last_done or 0.0) - (self._t_first_submit or 0.0)
-        slots = self._batches_run * self.batch_size
-        return {
-            "backend": self.backend.name,
-            "n": len(res),
-            "batch_size": self.batch_size,
-            "batches": self._batches_run,
-            "padded_slots": self._padded_slots,
-            # real images / total slots across every step: the fraction of
-            # compute spent on real work vs zero padding (stream benchmarks
-            # report this as pad waste)
-            "batch_occupancy": (slots - self._padded_slots) / slots if slots else 0.0,
-            "mesh_devices": int(self.mesh.devices.size) if self.mesh is not None else 1,
-            **latency_stats([r.latency_s for r in res], wall),
-        }
+        """Per-request latency distribution + engine throughput + the
+        admission ledger (submitted == served + shed + pending)."""
+        with self._cond:
+            shed_total = sum(self._shed_counts.values())
+            pending = len(self._queue) + self._in_flight
+            slots = self._batches_run * self.batch_size
+            wall = ((self._t_last_done or 0.0)
+                    - (self._t_first_submit or 0.0)) if self._served else 0.0
+            out = {
+                "backend": self.backend.name,
+                "n": self._served,
+                "submitted": self._submitted,
+                "shed": shed_total,
+                "shed_by_reason": dict(sorted(self._shed_counts.items())),
+                "pending": pending,
+                # the engine-level no-silent-loss invariant
+                "accounted":
+                    self._submitted == self._served + shed_total + pending,
+                "batch_size": self.batch_size,
+                "batches": self._batches_run,
+                "padded_slots": self._padded_slots,
+                # real images / total slots across every step: the fraction
+                # of compute spent on real work vs zero padding (stream
+                # benchmarks report this as pad waste)
+                "batch_occupancy":
+                    (slots - self._padded_slots) / slots if slots else 0.0,
+                "queue_hwm": self._queue_hwm,
+                "mesh_devices": (int(self.mesh.devices.size)
+                                 if self.mesh is not None else 1),
+                # busy = sum of per-step serving windows; wall spans idle
+                # gaps too, so throughput is reported over busy time (an
+                # engine serving two bursts an hour apart still reports its
+                # real service rate, not served/3600)
+                "busy_s": self._busy_s,
+                "wall_s": wall,
+            }
+            if self._deadline_total:
+                out["deadline_total"] = self._deadline_total
+                out["served_within_deadline"] = self._deadline_ok
+                # goodput under the latency SLO: requests answered in time
+                # over everything that asked (sheds count against it)
+                out["goodput"] = self._deadline_ok / self._deadline_total
+            if self._served:
+                out.update(latency_stats(self._latencies, self._busy_s))
+            return out

@@ -199,15 +199,19 @@ class StreamingPipeline:
             self._stage_s["tile"].append(item.stage_s["tile"])
             await self._admit(q_infer, "tile", item)
 
-    def _serve_wave(self, tiles: np.ndarray) -> np.ndarray:
+    def _serve_wave(self, tiles: np.ndarray) -> "np.ndarray | None":
         """One batched wave through the engine/router (worker thread); in
-        sweep mode, one jitted full-frame trunk call instead."""
+        sweep mode, one jitted full-frame trunk call instead.  The engine's
+        intake stays open across waves (continuous batching) and `serve()`
+        pops its own results, so the engine's resident state stays O(batch)
+        over an unbounded clip.  Returns None when the engine shed any of
+        the frame's tiles — a partially-scored frame is a dropped frame."""
         eng = self.engine
         if self.sweep:
             return self.tiler.score(eng.params, tiles, backend=eng.backend)
-        if getattr(eng, "drained", False):
-            eng.reopen()                           # engines close after run()
         res = eng.serve(list(tiles))
+        if any(r is None for r in res):
+            return None
         return np.stack([r.scores for r in res])
 
     async def _infer_stage(self, q_infer: asyncio.Queue,
@@ -225,6 +229,9 @@ class StreamingPipeline:
                 None, self._serve_wave, item.tiles)
             item.stage_s["infer"] = time.perf_counter() - t0
             self._stage_s["infer"].append(item.stage_s["infer"])
+            if item.scores is None:
+                self._drop("infer", "shed")        # engine shed >=1 tile
+                continue
             await self._admit(q_agg, "infer", item)
 
     async def _agg_stage(self, q_agg: asyncio.Queue) -> None:

@@ -1,0 +1,319 @@
+"""Overload behavior: admission control, SLO routing, elastic scaling, and
+the serving-accounting regressions (idle-window qps, bounded retention,
+degenerate latency_stats)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import smallnet
+from repro.serving.router import ReplicaRouter
+from repro.serving.vision_engine import (EngineFaultError, VisionEngine,
+                                         latency_stats)
+from repro.streaming.loadgen import LoadGen
+
+
+@pytest.fixture(scope="module")
+def vision_setup(rng):
+    params = smallnet.init_params(jax.random.key(0))
+    images = rng.uniform(0.0, 1.0, (104, 28, 28, 1)).astype(np.float32)
+    return params, images
+
+
+def _slow_step(batch_size: int, delay_s: float):
+    """Deterministic-capacity stand-in for the jitted step: the service
+    rate is exactly batch_size/delay_s, independent of the host."""
+    def f(params, x):
+        time.sleep(delay_s)
+        return jnp.zeros((batch_size, 10), jnp.float32)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_latency_stats_zero_window_is_zero_qps():
+    """Regression: a zero-length serving window used to report inf qps."""
+    s = latency_stats([0.001, 0.002], 0.0)
+    assert s["throughput_qps"] == 0.0
+    assert np.isfinite(s["throughput_qps"])
+    assert s["latency_p99_ms"] >= s["latency_p50_ms"] > 0
+
+
+def test_latency_stats_empty_raises():
+    """Regression: an empty latency set used to nan every percentile."""
+    with pytest.raises(ValueError, match="empty latency set"):
+        latency_stats([], 1.0)
+
+
+def test_throughput_over_busy_time_not_idle_gaps(vision_setup):
+    """Regression (idle-window qps): an engine serving two bursts separated
+    by a sleep must report its service rate over BUSY time — the old
+    wall = t_last_done - t_first_submit accounting deflated qps by the
+    inter-burst idle gap."""
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=8)
+    eng.serve(list(images[:16]))
+    time.sleep(0.5)                                  # the idle gap
+    eng.serve(list(images[16:32]))
+    s = eng.stats()
+    assert s["wall_s"] >= 0.5                        # gap is inside the wall
+    assert s["busy_s"] < s["wall_s"] - 0.4           # ...but not inside busy
+    wall_qps = s["n"] / s["wall_s"]
+    assert s["throughput_qps"] == pytest.approx(s["n"] / s["busy_s"])
+    assert s["throughput_qps"] > 3 * wall_qps        # the deflation is gone
+
+
+def test_engine_resident_results_stay_bounded(vision_setup):
+    """Regression (unbounded result growth): a pipeline-style per-wave
+    serve() over a 300-frame run keeps the engine's resident result set
+    O(batch), not O(stream)."""
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=8)
+    for i in range(300):
+        res = eng.serve([images[i % 100], images[(i + 1) % 100]])
+        assert len(res) == 2
+        assert len(eng._results) == 0                # popped by serve()
+        assert len(eng._shed) == 0
+    s = eng.stats()
+    assert s["n"] == 600 and s["submitted"] == 600 and s["accounted"]
+
+
+def test_router_resident_results_stay_bounded(vision_setup):
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                         batch_size=8, warmup=False)
+    for i in range(100):
+        res = router.serve([images[i % 100], images[(i + 1) % 100]])
+        assert len(res) == 2
+        assert len(router._results) == 0
+        assert len(router._assignment) == 0
+        assert len(router._shed) == 0
+    assert router.stats()["n"] == 200
+
+
+# ---------------------------------------------------------------------------
+# Admission control under open-loop overload
+# ---------------------------------------------------------------------------
+
+
+def test_admission_shed_accounting_under_2x_poisson(vision_setup):
+    """2x-capacity Poisson load against a bounded queue: the engine sheds
+    (reason queue_depth), never exceeds the bound, and the ledger
+    reconciles exactly: submitted == served + shed."""
+    params, _ = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=8, warmup=False,
+                       max_queue=16)
+    eng._step_fn = _slow_step(8, 0.010)              # capacity: 800 qps
+    gen = LoadGen(process="poisson", rate_qps=1600, n_requests=300,
+                  n_streams=4, seed=7)
+    img = np.zeros((28, 28, 1), np.float32)
+    eng.start()
+    try:
+        gen.replay(lambda a, t: eng.submit(img, t_submit=t))
+    finally:
+        eng.stop(drain=True)
+    s = eng.stats()
+    assert s["submitted"] == len(gen)                # every arrival admitted
+    assert s["shed"] > 0
+    assert s["shed_by_reason"].get("queue_depth", 0) == s["shed"]
+    assert s["pending"] == 0
+    assert s["n"] + s["shed"] == len(gen) and s["accounted"]
+    assert s["queue_hwm"] <= 16
+
+
+def test_deadline_and_age_sheds_at_batch_forming(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+    uids = [eng.submit(img, deadline_ms=0.01) for img in images[:3]]
+    time.sleep(0.01)
+    assert eng.run() == 0                            # all expired unserved
+    assert eng.pop_shed(uids) == {u: "deadline" for u in uids}
+    assert eng.stats()["goodput"] == 0.0             # nothing made its SLO
+    aged = VisionEngine(params, backend="ref", batch_size=4, warmup=False,
+                        max_age_ms=0.01)
+    aged.submit_many(list(images[:2]))
+    time.sleep(0.01)
+    assert aged.run() == 0
+    assert set(aged.pop_shed().values()) == {"age"}
+    assert aged.stats()["accounted"]
+
+
+def test_serve_returns_none_gaps_for_shed(vision_setup):
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False,
+                       max_queue=2)
+    res = eng.serve(list(images[:5]))                # 2 queued, 3 shed
+    assert len(res) == 5
+    assert sum(r is None for r in res) == 3
+    assert {r.uid for r in res if r is not None} == {0, 1}
+
+
+def test_faulted_serving_thread_sheds_and_reports(vision_setup):
+    """A dying jitted step must not strand requests: the batch and queue
+    shed as "fault", the fault is exposed, later submits shed at the door,
+    and accounting still reconciles."""
+    params, images = vision_setup
+    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+    eng._step_fn = lambda p, x: (_ for _ in ()).throw(
+        RuntimeError("hardware fault"))
+    eng.start()
+    uids = eng.submit_many(list(images[:6]))
+    eng.wait(uids, timeout=30)                       # resolves via sheds
+    assert isinstance(eng.fault, RuntimeError)
+    assert set(eng.pop_shed(uids).values()) == {"fault"}
+    late = eng.submit(images[0])                     # faulted engine: at-door
+    assert eng.pop_shed([late]) == {late: "fault"}
+    assert eng.stats()["accounted"]
+    with pytest.raises(EngineFaultError):            # unknown uids never resolve
+        eng.wait([10 ** 9], timeout=5)
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware routing
+# ---------------------------------------------------------------------------
+
+
+def test_slo_router_sheds_instead_of_blowing_p99(vision_setup):
+    """Same 100-request burst against the same deterministic 800 qps
+    replica: the least-loaded policy queues everything and its p99 eats the
+    full backlog; the SLO policy sheds at the door and holds p99 near the
+    deadline."""
+    params, _ = vision_setup
+    img = np.zeros((28, 28, 1), np.float32)
+
+    def mk(policy, **kw):
+        r = ReplicaRouter.from_backends(params, ["ref"], batch_size=8,
+                                        warmup=False, policy=policy, **kw)
+        r.replicas[0]._step_fn = _slow_step(8, 0.010)
+        r.serve([img] * 16)                          # establish service rate
+        return r
+
+    ll = mk("least_loaded")
+    ll.serve([img] * 100)
+    slo = mk("slo", slo_ms=25.0)
+    res = slo.serve([img] * 100)
+    s_ll, s_slo = ll.stats(), slo.stats()
+    assert s_ll["shed"] == 0                         # queues it all...
+    assert s_slo["shed_by_reason"]["slo_wait"] >= 30  # ...SLO sheds instead
+    assert s_slo["latency_p99_ms"] < s_ll["latency_p99_ms"]
+    assert s_slo["latency_p99_ms"] < 100.0           # ~deadline + one batch
+    assert s_slo["accounted"] and s_slo["goodput"] > 0.0
+    assert sum(r is None for r in res) == s_slo["shed"]
+
+
+def test_slo_dispatch_prefers_faster_replica(vision_setup):
+    """Projected-wait dispatch: a fast replica with the same queue depth
+    must win over a slow one — depth-only dispatch can't see that."""
+    params, _ = vision_setup
+    img = np.zeros((28, 28, 1), np.float32)
+    router = ReplicaRouter.from_backends(params, ["ref", "ref"],
+                                         batch_size=8, warmup=False,
+                                         policy="slo")
+    router.replicas[0]._step_fn = _slow_step(8, 0.050)   # 160 qps
+    router.replicas[1]._step_fn = _slow_step(8, 0.005)   # 1600 qps
+    router.serve([img] * 32)                         # learn both rates
+    with router._lock:
+        router._pending[0] = []                      # equalize depths
+        router._pending[1] = []
+    assigned = [router._assignment[router.submit(img)] for _ in range(6)]
+    assert assigned.count(1) > assigned.count(0)
+
+
+def test_router_fleet_ledger_reconciles_with_engine_sheds(vision_setup):
+    """Engine-level admission sheds surface as fleet sheds (not failover):
+    submitted == served + shed at BOTH levels."""
+    params, images = vision_setup
+    router = ReplicaRouter.from_backends(
+        params, ["ref"], batch_size=4, warmup=False,
+        engine_kw={"max_queue": 4})
+    uids = router.submit_many(list(images[:12]))
+    router.run()
+    router.wait(uids)
+    s = router.stats()
+    assert s["submitted"] == 12
+    assert s["accounted"]
+    assert s["n"] + s["shed"] == 12
+    if s["shed"]:
+        assert set(s["shed_by_reason"]) <= {"queue_depth"}
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_spawns_under_backlog_and_retires_idle(vision_setup):
+    params, images = vision_setup
+    spawned = []
+
+    def spawn():
+        eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
+        spawned.append(eng)
+        return eng
+
+    router = ReplicaRouter.from_backends(
+        params, ["ref"], batch_size=4, warmup=False, spawn=spawn,
+        min_replicas=1, max_replicas=3, scale_up_depth=2.0,
+        scale_down_idle=2)
+    router.submit_many(list(images[:20]))            # 20 > 2.0 * 4 capacity
+    assert router.autoscale() == "spawn:1"
+    assert len(router.replicas) == 2 and len(spawned) == 1
+    uids = list(router._assignment)
+    router.submit_many(list(images[20:24]))          # lands on the new replica
+    assert any(i == 1 for i in router._assignment.values())
+    router.run()
+    router.wait(uids)
+    assert router.stats()["healthy"] == 2
+    # drained fleet: two consecutive idle checks retire one replica...
+    assert router.autoscale() is None                # idle tick 1
+    retire = router.autoscale()                      # idle tick 2
+    assert retire is not None and retire.startswith("retire:")
+    s = router.stats()
+    assert s["healthy"] == 1 and len(s["retired"]) == 1
+    # ...but never below min_replicas
+    assert router.autoscale() is None
+    assert router.autoscale() is None
+    assert router.stats()["healthy"] == 1
+    # and dispatch routes around the retiree
+    retired = int(retire.split(":")[1])
+    live = [router._assignment[router.submit(images[0])] for _ in range(4)]
+    assert retired not in live
+    assert router.stats()["accounted"]
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching == wave serving, word for word
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_thread_word_exact_vs_sync_on_fixed(vision_setup):
+    """The serving DISCIPLINE must not change the arithmetic: a threaded
+    continuous-batching engine on the fused fixed-point kernels returns the
+    same int32 score words as a synchronous drain on the emulated fixed
+    backend, whatever batch boundaries the thread happened to form."""
+    params, images = vision_setup
+    sync = VisionEngine(params, backend="fixed", batch_size=8)
+    want = sync.serve(list(images[:24]))
+    eng = VisionEngine(params, backend="fixed_pallas", batch_size=8)
+    eng.start()
+    try:
+        uids = []
+        for i in range(0, 24, 3):                    # dribble: ragged batches
+            uids += eng.submit_many(list(images[i:i + 3]))
+            time.sleep(0.002)
+        eng.wait(uids, timeout=60)
+    finally:
+        eng.stop()
+    got = eng.pop_results(uids)
+    assert sorted(got) == uids
+    np.testing.assert_array_equal(
+        np.stack([got[u].scores for u in uids]),
+        np.stack([r.scores for r in want]))
+    assert [got[u].pred for u in uids] == [r.pred for r in want]
+    assert eng.stats()["accounted"] and eng.stats()["shed"] == 0

@@ -1,0 +1,128 @@
+"""Open-loop load generator: determinism, process shape, replay clocking."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.streaming.loadgen import PROCESSES, Arrival, LoadGen, arrival_cv
+
+
+@pytest.mark.parametrize("process", PROCESSES)
+def test_schedule_deterministic_per_seed(process):
+    """Two LoadGens with equal args emit byte-identical workloads — the
+    SyntheticVideoSource contract at the traffic layer."""
+    mk = lambda: LoadGen(process=process, rate_qps=400, duration_s=2.0,
+                         n_streams=4, seed=11)
+    a, b = mk().schedule(), mk().schedule()
+    assert a == b
+    assert len(a) > 0
+    # ...and a different seed is a different workload
+    c = LoadGen(process=process, rate_qps=400, duration_s=2.0,
+                n_streams=4, seed=12).schedule()
+    assert [x.t for x in a] != [x.t for x in c]
+
+
+@pytest.mark.parametrize("process", PROCESSES)
+def test_schedule_shape(process):
+    gen = LoadGen(process=process, rate_qps=600, duration_s=2.0,
+                  n_streams=3, seed=0)
+    sched = gen.schedule()
+    ts = [a.t for a in sched]
+    assert ts == sorted(ts)                          # time-ordered
+    assert [a.uid for a in sched] == list(range(len(sched)))
+    assert all(0.0 <= a.t < gen.duration_s for a in sched)
+    assert {a.stream for a in sched} <= set(range(3))
+    assert all(0 <= a.label <= 9 for a in sched)
+    # realized load near nominal: tight for (in)homogeneous Poisson, loose
+    # for bursty — 3 streams x 2s is only a handful of on/off cycles, so
+    # the realized rate of the modulated process swings hard around its
+    # duty-normalized mean
+    lo, hi = (0.5, 1.7) if process == "bursty" else (0.7, 1.3)
+    assert lo * 600 <= gen.offered_qps <= hi * 600
+
+
+def test_images_deterministic_and_shaped():
+    gen = LoadGen(process="poisson", rate_qps=100, n_requests=32, seed=3)
+    imgs = gen.images()
+    assert imgs.shape == (len(gen), 28, 28, 1) and imgs.dtype == np.float32
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    np.testing.assert_array_equal(
+        imgs, LoadGen(process="poisson", rate_qps=100,
+                      n_requests=32, seed=3).images())
+    # per-uid render, independent of call order
+    a = gen.schedule()[5]
+    np.testing.assert_array_equal(gen.image(a), imgs[5])
+
+
+def test_fixed_count_mode_sizes_duration():
+    """n requests at rate r occupy n/r seconds: overload rows take the same
+    wall time as underload rows."""
+    gen = LoadGen(process="poisson", rate_qps=500, n_requests=250, seed=0)
+    assert gen.duration_s == pytest.approx(0.5)
+    with pytest.raises(ValueError):
+        LoadGen(rate_qps=10, duration_s=1.0, n_requests=10)
+    with pytest.raises(ValueError):
+        LoadGen(rate_qps=10)
+
+
+def test_bursty_is_burstier_than_poisson():
+    """The Markov-modulated process must actually produce heavier-tailed
+    inter-arrival gaps at the same mean rate (CV > Poisson's ~1)."""
+    kw = dict(rate_qps=800, duration_s=4.0, n_streams=2, seed=5)
+    cv_p = arrival_cv(LoadGen(process="poisson", **kw))
+    cv_b = arrival_cv(LoadGen(process="bursty", **kw))
+    assert cv_b > cv_p * 1.3
+    # duty-cycle normalization holds the average rate (mean is rate-true)
+    n_p = len(LoadGen(process="poisson", **kw))
+    n_b = len(LoadGen(process="bursty", **kw))
+    assert 0.6 * n_p <= n_b <= 1.4 * n_p
+
+
+def test_diurnal_ramps_toward_midday():
+    """The inhomogeneous rate peaks mid-window: the middle half of the
+    schedule must hold clearly more arrivals than the outer half."""
+    gen = LoadGen(process="diurnal", rate_qps=800, duration_s=4.0,
+                  n_streams=2, seed=9, diurnal_floor=0.1)
+    ts = np.asarray([a.t for a in gen.schedule()])
+    mid = ((ts >= 1.0) & (ts < 3.0)).sum()
+    outer = len(ts) - mid
+    assert mid > 1.5 * outer
+
+
+def test_replay_open_loop_clocking():
+    """replay() emits on the generator's clock: scheduled timestamps are
+    handed to the callback, the full schedule is submitted even when the
+    'server' is a black hole, and wall time tracks the duration."""
+    gen = LoadGen(process="poisson", rate_qps=200, duration_s=0.5,
+                  n_streams=2, seed=1)
+    got = []
+    t0 = time.perf_counter()
+    n = gen.replay(lambda a, t: got.append((a, t)))
+    wall = time.perf_counter() - t0
+    assert n == len(gen) == len(got)
+    assert all(isinstance(a, Arrival) for a, _ in got)
+    # scheduled stamps are monotone and span ~the schedule
+    stamps = [t for _, t in got]
+    assert stamps == sorted(stamps)
+    assert stamps[-1] - stamps[0] == pytest.approx(
+        gen.schedule()[-1].t - gen.schedule()[0].t, abs=1e-6)
+    assert wall >= gen.schedule()[-1].t * 0.9        # it really paced itself
+
+
+def test_replay_speed_compresses_schedule():
+    gen = LoadGen(process="poisson", rate_qps=100, duration_s=1.0,
+                  n_streams=1, seed=2)
+    t0 = time.perf_counter()
+    gen.replay(lambda a, t: None, speed=20.0)
+    assert time.perf_counter() - t0 < 0.5            # 1s schedule, 20x speed
+
+
+def test_bad_args_raise():
+    with pytest.raises(ValueError):
+        LoadGen(process="lunar", rate_qps=10, duration_s=1.0)
+    with pytest.raises(ValueError):
+        LoadGen(rate_qps=0, duration_s=1.0)
+    with pytest.raises(ValueError):
+        LoadGen(rate_qps=10, duration_s=1.0, n_streams=0)
+    with pytest.raises(ValueError):
+        LoadGen(rate_qps=10, duration_s=1.0, diurnal_floor=0.0)

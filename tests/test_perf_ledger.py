@@ -1,0 +1,65 @@
+"""perf_ledger.check(): the gate must be symmetric — a row missing from
+either side (committed ledger or fresh measurement) is a failure."""
+import copy
+
+from benchmarks.perf_ledger import FPS_BAND, check
+
+
+def _ledger():
+    row = {"sustained_fps": 100.0, "latency_p50_ms": 5.0,
+           "latency_p99_ms": 9.0, "drop_rate": 0.0,
+           "trunk_launches_per_frame": 1, "program_launches_per_frame": 3}
+    composed = dict(row, trunk_launches_per_frame=33,
+                    program_launches_per_frame=35)
+    return {
+        "config": {"frames": 16, "seed": 7},
+        "rows": {
+            "fixed": {"sweep_composed": copy.deepcopy(composed),
+                      "sweep_megakernel": copy.deepcopy(row)},
+            "ref": {"sweep_composed": copy.deepcopy(composed)},
+        },
+    }
+
+
+def test_check_passes_on_identical():
+    assert check(_ledger(), copy.deepcopy(_ledger())) == []
+
+
+def test_check_flags_fresh_row_missing_from_ledger():
+    committed, fresh = _ledger(), _ledger()
+    del committed["rows"]["fixed"]["sweep_megakernel"]
+    fails = check(committed, fresh)
+    assert any("misses row fixed/sweep_megakernel" in f for f in fails)
+
+
+def test_check_flags_committed_row_vanished_from_fresh():
+    """Regression (one-sided check): a backend/route silently dropped from
+    the measurement sweep used to pass --check."""
+    committed, fresh = _ledger(), _ledger()
+    del fresh["rows"]["fixed"]["sweep_megakernel"]
+    fails = check(committed, fresh)
+    assert any("fixed/sweep_megakernel vanished" in f for f in fails)
+    # a whole backend vanishing is flagged too
+    committed2, fresh2 = _ledger(), _ledger()
+    del fresh2["rows"]["ref"]
+    assert any("ref/sweep_composed vanished" in f
+               for f in check(committed2, fresh2))
+
+
+def test_check_flags_launch_topology_drift_and_fps_band():
+    committed, fresh = _ledger(), _ledger()
+    fresh["rows"]["fixed"]["sweep_megakernel"]["trunk_launches_per_frame"] = 2
+    fails = check(committed, fresh)
+    assert any("trunk_launches_per_frame changed 1 -> 2" in f for f in fails)
+    assert any("megakernel trunk is 2 launches" in f for f in fails)
+    committed, fresh = _ledger(), _ledger()
+    fresh["rows"]["fixed"]["sweep_megakernel"]["sustained_fps"] = (
+        FPS_BAND * 100.0 * 0.9)
+    assert any("regressed past" in f for f in check(committed, fresh))
+
+
+def test_check_config_drift_short_circuits():
+    committed, fresh = _ledger(), _ledger()
+    committed["config"]["frames"] = 8
+    fails = check(committed, fresh)
+    assert len(fails) == 1 and "config drifted" in fails[0]

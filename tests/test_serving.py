@@ -78,7 +78,7 @@ def test_int8_quanttensor_serving_direct(setup, rng):
 from repro.core import smallnet
 from repro.launch.mesh import make_serving_mesh
 from repro.serving.router import FleetExhaustedError, ReplicaRouter
-from repro.serving.vision_engine import EngineDrainedError, VisionEngine
+from repro.serving.vision_engine import VisionEngine
 
 
 @pytest.fixture(scope="module")
@@ -158,32 +158,41 @@ def test_vision_engine_fixed_pallas_serves_bit_exact_words(vision_setup):
 
 
 # ---------------------------------------------------------------------------
-# Engine lifecycle: run() closes the intake (regression for silent dangling
-# submits after the drain)
+# Engine lifecycle: continuous batching — the intake never closes (regression
+# for the old wave model's run()/reopen() churn)
 # ---------------------------------------------------------------------------
 
 
-def test_vision_engine_submit_after_drain_raises(vision_setup):
+def test_vision_engine_intake_stays_open_across_drains(vision_setup):
+    """run() drains the current queue but the intake stays open: submits
+    after a drain serve on the next step, uids keep counting, and the
+    served ledger accumulates across bursts."""
     params, images = vision_setup
     eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
     eng.submit_many(list(images[:6]))
-    assert eng.run() == 6 and eng.drained
-    with pytest.raises(EngineDrainedError):
-        eng.submit(images[0])
-    with pytest.raises(EngineDrainedError):          # serve() submits too
-        eng.serve(list(images[:2]))
-    assert len(eng.results()) == 6                   # nothing mis-batched
+    assert eng.run() == 6
+    res = eng.serve(list(images[6:9]))               # second burst just works
+    assert [r.uid for r in res] == [6, 7, 8]
+    s = eng.stats()
+    assert s["n"] == 9 and s["submitted"] == 9 and s["accounted"]
 
 
-def test_vision_engine_reopen_starts_new_wave(vision_setup):
+def test_vision_engine_serving_thread_continuous_batches(vision_setup):
+    """start() serves whatever arrives, across separated bursts, with no
+    lifecycle calls in between; stop(drain=True) finishes the tail."""
     params, images = vision_setup
-    eng = VisionEngine(params, backend="ref", batch_size=4, warmup=False)
-    eng.serve(list(images[:4]))
-    eng.reopen()
-    assert not eng.drained
-    res = eng.serve(list(images[4:7]))               # second wave works
-    assert [r.uid for r in res] == [4, 5, 6]
-    assert len(eng.results()) == 7                   # waves accumulate
+    eng = VisionEngine(params, backend="ref", batch_size=4)
+    eng.start()
+    try:
+        uids1 = eng.submit_many(list(images[:5]))
+        eng.wait(uids1, timeout=30)
+        uids2 = eng.submit_many(list(images[5:8]))   # second burst, same engine
+        eng.wait(uids2, timeout=30)
+    finally:
+        eng.stop()
+    res = eng.pop_results(uids1 + uids2)
+    assert sorted(res) == sorted(uids1 + uids2)
+    assert eng.stats()["accounted"] and eng.stats()["shed"] == 0
 
 
 # ---------------------------------------------------------------------------
