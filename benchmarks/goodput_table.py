@@ -20,6 +20,12 @@ and fused fixed-point Pallas substrates (admission bound `max_queue`,
 per-request deadlines), and a 2-replica `ReplicaRouter` under the
 SLO-aware policy (projected-wait dispatch, door shedding).
 
+Each row also reports `mfu_load` — MFU under load: the busy-time served
+rate times the deployed per-image model FLOPs (analysis/mfu.py), over the
+resolved device's peak at the backend's dtype class.  It answers "how much
+of the machine does the serving discipline actually keep busy" and is the
+load-side twin of the perf ledger's per-route `mfu` column.
+
 `--smoke` is the CI gate (Poisson + bursty):
   - every row's ledger reconciles (engine AND fleet level),
   - the 2.0x rows shed (overload must engage admission control — a queue
@@ -51,6 +57,23 @@ FLOOR_MS = 10.0          # per-step service-time floor: a deterministic rate
                          # on real hardware run with --floor-ms 0
 LOADS = {"0.5x": 0.5, "2.0x": 2.0}
 SMOKE_PROCESSES = ("poisson", "bursty")
+# dtype class whose device peak the MFU-under-load column divides by
+TOPO_BACKEND = {"engine_ref": "ref", "engine_fixed_pallas": "fixed_pallas",
+                "router_slo_x2": "ref"}
+
+
+def _mfu_under_load(topo: str, stats: dict) -> float | None:
+    """Busy-time served qps x deployed per-image model FLOPs / device peak.
+    None when the row carries no throughput (nothing served)."""
+    from repro.analysis import mfu
+
+    qps = stats.get("throughput_qps")
+    if not qps:
+        return None
+    device, _ = mfu.resolve()
+    dtype, word_bytes = mfu.backend_numerics(TOPO_BACKEND[topo])
+    flops = mfu.deployed_workload(word_bytes).flops
+    return qps * flops / device.peak(dtype)
 
 
 def _deadline_ms(capacity_qps: float, batch: int) -> float:
@@ -152,6 +175,7 @@ def measure(*, processes, n_requests: int, topologies=None,
                     "topology": topo, "process": process, "load": load_name,
                     "capacity_qps": cap, "offered_qps": gen.offered_qps,
                     "slo_ms": slo_ms, "stats": s,
+                    "mfu_under_load": _mfu_under_load(topo, s),
                 })
     return rows
 
@@ -184,6 +208,11 @@ def gate(rows: list[dict]) -> list[str]:
             failures.append(
                 f"{tag}: no shedding under 2x-capacity offered load — "
                 f"admission control never engaged (unbounded queue?)")
+        mfu_load = r.get("mfu_under_load")
+        if mfu_load is not None and not 0.0 < mfu_load <= 1.0:
+            failures.append(
+                f"{tag}: mfu_under_load={mfu_load:.3e} outside (0, 1] — "
+                f"served-rate or device-peak accounting broke")
     for (topo, proc, load), g_hi in goodput.items():
         if load != "2.0x":
             continue
@@ -216,6 +245,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         s = r["stats"]
+        mfu_load = r.get("mfu_under_load")
+        mfu_s = f"{mfu_load:.3e}" if mfu_load is not None else "n/a"
         print(f"goodput/{r['topology']}_{r['process']}_{r['load']},,"
               f"goodput={s.get('goodput', 0.0):.3f} "
               f"submitted={s['submitted']} served={s['n']} shed={s['shed']} "
@@ -223,6 +254,7 @@ def main() -> None:
               f"capacity_qps={r['capacity_qps']:.0f} "
               f"slo_ms={r['slo_ms']:.1f} "
               f"p99_ms={s.get('latency_p99_ms', 0.0):.2f} "
+              f"mfu_load={mfu_s} "
               f"shed_by={s['shed_by_reason']}")
 
     failures = gate(rows) if args.smoke else []

@@ -1,20 +1,39 @@
-"""Render §Dry-run and §Roofline markdown tables from the sweep JSONs into
-EXPERIMENTS.md (between the *_TABLE_START/END markers).
+"""Render the experiment tables from the committed JSON artifacts.
 
-    PYTHONPATH=src python -m benchmarks.render_tables
+    PYTHONPATH=src python -m benchmarks.render_tables [--out PATH]
+
+Three tables, each skipped gracefully when its source JSON is absent (a
+fresh checkout carries only the BENCH_<pr>.json ledgers):
+
+  * §Dry-run  — LLM cell compile sweep (benchmarks/dryrun_results.json)
+  * §Roofline — LLM three-term rows + smallNet analytic rows
+                (benchmarks/roofline_results.json)
+  * §Perf trajectory — one row per (ledger, backend, route) across every
+                committed BENCH_<pr>.json: FPS, device ms, bytes/frame and
+                MFU, so the cross-PR perf story reads off one table.
+
+Output goes to EXPERIMENTS.md between the *_TABLE_START/END markers when
+that file exists (the original seed behavior), else to benchmarks/TABLES.md
+as a standalone page — this is what the nightly CI lane uploads as an
+artifact next to the raw ledgers.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import re
 
 HERE = pathlib.Path(__file__).resolve().parent
 EXP = HERE.parent / "EXPERIMENTS.md"
+DEFAULT_OUT = HERE / "TABLES.md"
 
 
-def dryrun_table() -> str:
-    res = json.loads((HERE / "dryrun_results.json").read_text())
+def dryrun_table() -> str | None:
+    p = HERE / "dryrun_results.json"
+    if not p.exists():
+        return None
+    res = json.loads(p.read_text())
     lines = ["| arch | shape | mesh | ok | peak GiB/dev | args GiB/dev | compile s |",
              "|---|---|---|---|---|---|---|"]
     for key in sorted(res):
@@ -34,8 +53,11 @@ def dryrun_table() -> str:
     return "\n".join(lines)
 
 
-def roofline_table() -> str:
-    res = json.loads((HERE / "roofline_results.json").read_text())
+def roofline_table() -> str | None:
+    p = HERE / "roofline_results.json"
+    if not p.exists():
+        return None
+    res = json.loads(p.read_text())
     lines = ["| arch | shape | compute s | memory s | collective s | dominant "
              "| MODEL_FLOPS | useful | roofline frac | one-line bottleneck note |",
              "|---|---|---|---|---|---|---|---|---|---|"]
@@ -49,6 +71,16 @@ def roofline_table() -> str:
         if "error" in v:
             lines.append(f"| {key} | ERROR {v['error'][:40]} |" + " |" * 8)
             continue
+        if key.startswith("smallnet"):
+            name, route = key.split("|")
+            lines.append(
+                f"| {name} | {route} | {v['compute_s']:.2e} "
+                f"| {v['memory_s']:.2e} | — | **{v['bound']}** "
+                f"| {v['flops']:.3g} | — "
+                f"| {v['attainable_flops']/v['peak_flops']:.3f} "
+                f"| intensity {v['intensity']:.1f} flop/B on "
+                f"{v.get('device', v.get('dtype', '?'))} |")
+            continue
         arch, shape = key.split("|")
         lines.append(
             f"| {arch} | {shape} | {v['compute_s']:.3f} | {v['memory_s']:.4f} "
@@ -58,19 +90,79 @@ def roofline_table() -> str:
     return "\n".join(lines)
 
 
+def trajectory_table() -> str | None:
+    """Cross-PR perf trajectory from every committed BENCH_<pr>.json.
+    Older ledgers predate the MFU schema; their rows render with em-dashes
+    rather than being dropped (the FPS trajectory is still the record)."""
+    from benchmarks.perf_ledger import ledger_paths
+
+    paths = ledger_paths()
+    if not paths:
+        return None
+    lines = ["| ledger | backend | route | fps | p50 ms | launches/frame "
+             "| bytes/frame | device ms | mfu | basis |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for p in paths:
+        led = json.loads(p.read_text())
+        for backend in sorted(led.get("rows", {})):
+            for route, row in sorted(led["rows"][backend].items()):
+                mfu_v = row.get("mfu")
+                lines.append(
+                    f"| {p.name} | {backend} | {route} "
+                    f"| {row.get('sustained_fps', '—')} "
+                    f"| {row.get('latency_p50_ms', '—')} "
+                    f"| {row.get('program_launches_per_frame', '—')} "
+                    f"| {row.get('bytes_per_frame', '—')} "
+                    f"| {row.get('device_ms_per_frame', '—')} "
+                    f"| {f'{mfu_v:.3e}' if mfu_v is not None else '—'} "
+                    f"| {row.get('mfu_basis', '—')} |")
+    return "\n".join(lines)
+
+
 def inject(text: str, start: str, end: str, payload: str) -> str:
     pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
     return pat.sub(start + "\n" + payload + "\n" + end, text)
 
 
+def standalone_page(tables: dict[str, str | None]) -> str:
+    parts = ["# Experiment tables\n",
+             "Rendered by `python -m benchmarks.render_tables` from the "
+             "committed JSON artifacts.\n"]
+    for title, body in tables.items():
+        parts.append(f"## {title}\n")
+        parts.append(body if body is not None
+                     else "_source JSON not present in this checkout_\n")
+    return "\n".join(parts) + "\n"
+
+
 def main():
-    t = EXP.read_text()
-    t = inject(t, "<!-- DRYRUN_TABLE_START -->", "<!-- DRYRUN_TABLE_END -->",
-               dryrun_table())
-    t = inject(t, "<!-- ROOFLINE_TABLE_START -->", "<!-- ROOFLINE_TABLE_END -->",
-               roofline_table())
-    EXP.write_text(t)
-    print("EXPERIMENTS.md tables updated")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write a standalone markdown page here instead of "
+                         "injecting into EXPERIMENTS.md "
+                         f"(default: EXPERIMENTS.md if present, else "
+                         f"{DEFAULT_OUT.name})")
+    args = ap.parse_args()
+
+    tables = {"Dry-run": dryrun_table(),
+              "Roofline": roofline_table(),
+              "Perf trajectory": trajectory_table()}
+
+    if args.out is None and EXP.exists():
+        t = EXP.read_text()
+        if tables["Dry-run"] is not None:
+            t = inject(t, "<!-- DRYRUN_TABLE_START -->",
+                       "<!-- DRYRUN_TABLE_END -->", tables["Dry-run"])
+        if tables["Roofline"] is not None:
+            t = inject(t, "<!-- ROOFLINE_TABLE_START -->",
+                       "<!-- ROOFLINE_TABLE_END -->", tables["Roofline"])
+        EXP.write_text(t)
+        print("EXPERIMENTS.md tables updated")
+        return
+    out = args.out or DEFAULT_OUT
+    out.write_text(standalone_page(tables))
+    rendered = [k for k, v in tables.items() if v is not None]
+    print(f"wrote {out} ({', '.join(rendered) or 'no sources present'})")
 
 
 if __name__ == "__main__":

@@ -1,29 +1,94 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
-    "while-loop-expensive-invariant-code-motion")
+import sys
 
-"""Roofline sweep: compile every single-pod cell, derive the three-term
-roofline from the compiled HLO, cache to benchmarks/roofline_results.json.
+# The LLM cells lower against a 512-device placeholder mesh; the smallnet
+# --smoke path is pure analytics + one tiny CPU lowering and must not pay
+# the 512-device client startup (conftest documents the same rule for
+# tests), so the flag is only set for the full sweep.
+if "--smoke" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+        "while-loop-expensive-invariant-code-motion")
+
+"""Roofline sweep -> benchmarks/roofline_results.json.
+
+Full mode compiles every single-pod LLM cell and derives the three-term
+roofline from the compiled HLO (the PR-0 seed behavior).  All modes also
+emit the SMALLNET rows: analytic two-term rooflines for the perf-ledger
+routes (tiler / composed sweep / megakernel sweep, ref + fixed_pallas
+numerics) from `analysis/mfu.py`'s workload model, cross-checked against
+`analysis/hlo_parse.py` conv FLOPs on the XLA-visible ref trunk.
 
     python -m repro.analysis.run_roofline [--arch A] [--shape S] [--force]
+    python -m repro.analysis.run_roofline --smoke   # smallnet only, CI gate
+
+--smoke is the bench-smoke CI lane: it recomputes only the smallnet rows
+and exits nonzero if any roofline term is NaN/inf/zero-denominator or the
+HLO cross-check drifts past 2% — the observability layer must never
+silently rot.
 """
 import argparse
 import gc
 import json
+import math
 import pathlib
-import sys
 import time
 import traceback
 
 
-from repro.analysis.roofline import roofline_from_artifacts, to_dict
-from repro.configs.base import ARCH_IDS, SHAPES, get_config
-from repro.launch.lowering import lower_cell, cell_report
-from repro.launch.mesh import make_production_mesh
-
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "roofline_results.json"
+
+
+def smallnet_rows(device_name: str) -> tuple[dict, list[str]]:
+    """(rows keyed 'smallnet-<backend>|<route>', failures).  Failures are
+    non-finite terms, zero denominators, and HLO-cross-check drift."""
+    from repro.analysis.roofline import smallnet_rooflines
+
+    failures = []
+    rows = smallnet_rooflines(device_name=device_name)
+    for key, r in rows.items():
+        for term in ("flops", "bytes", "intensity", "compute_s", "memory_s",
+                     "attainable_flops", "peak_flops", "mem_bw"):
+            v = r[term]
+            if not math.isfinite(v):
+                failures.append(f"{key}: {term}={v!r} is not finite")
+            elif v <= 0:
+                failures.append(f"{key}: {term}={v!r} — zero/negative "
+                                f"denominator would make MFU meaningless")
+    failures += _hlo_crosscheck()
+    return rows, failures
+
+
+def _hlo_crosscheck(H: int = 56, W: int = 56) -> list[str]:
+    """Lower the plain ref trunk and compare XLA's conv FLOPs against the
+    analytic model.  Only the float path is XLA-visible (Pallas launches
+    are opaque custom calls — exactly why the ledger denominator is
+    analytic), and only conv/dot ops are counted on both sides, so the
+    two totals must agree to rounding."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo_parse import analyze_hlo
+    from repro.analysis.mfu import trunk_workload
+    from repro.core import smallnet
+
+    params = smallnet.seeded_params()
+    frame = jax.ShapeDtypeStruct((1, H, W, 1), jnp.float32)
+    txt = jax.jit(
+        lambda f: smallnet.conv_trunk(params, f, backend="ref")
+    ).lower(frame).compile().as_text()
+    hlo_flops = analyze_hlo(txt).flops
+    model = trunk_workload(H, W, "trunk").flops
+    if hlo_flops <= 0:
+        return [f"hlo-crosscheck: XLA reports {hlo_flops} conv FLOPs for "
+                f"the {H}x{W} ref trunk"]
+    drift = abs(hlo_flops - model) / model
+    if drift > 0.02:
+        return [f"hlo-crosscheck: analytic trunk model {model} vs HLO "
+                f"{hlo_flops:.0f} FLOPs ({drift:.1%} drift) — the workload "
+                f"model no longer matches the compiled program"]
+    return []
 
 
 def main() -> int:
@@ -31,10 +96,36 @@ def main() -> int:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallnet rows only; nonzero exit on NaN/zero "
+                         "rooflines or HLO-model drift (CI bench-smoke)")
+    ap.add_argument("--device", default="tpu-v5e",
+                    help="MFU-database device for the smallnet rows")
     args = ap.parse_args()
     res = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+
+    rows, failures = smallnet_rows(args.device)
+    res.update({k: dict(v, device=args.device) for k, v in rows.items()})
+    for key in sorted(rows):
+        r = rows[key]
+        print(f"[roofline] {key} bound={r['bound']} "
+              f"intensity={r['intensity']:.1f} flop/B "
+              f"attainable={r['attainable_flops']:.3g} FLOP/s", flush=True)
+    RESULTS.write_text(json.dumps(res, indent=1, sort_keys=True))
+
+    if args.smoke:
+        for f in failures:
+            print(f"[roofline] FAIL {f}")
+        print(f"[roofline] smoke {'FAIL' if failures else 'OK'}")
+        return 1 if failures else 0
+
+    from repro.analysis.roofline import roofline_from_artifacts, to_dict
+    from repro.configs.base import ARCH_IDS, SHAPES, get_config
+    from repro.launch.lowering import lower_cell, cell_report
+    from repro.launch.mesh import make_production_mesh
+
     mesh = make_production_mesh()
-    failures = 0
+    n_llm_failures = 0
     for arch in ARCH_IDS:
         if args.arch and arch != args.arch:
             continue
@@ -65,12 +156,12 @@ def main() -> int:
                 del art
                 gc.collect()
             except Exception as e:
-                failures += 1
+                n_llm_failures += 1
                 res[key] = {"error": f"{type(e).__name__}: {e}"}
                 traceback.print_exc(limit=3)
             RESULTS.write_text(json.dumps(res, indent=1, sort_keys=True))
-    print(f"[roofline] done, {failures} failures")
-    return 1 if failures else 0
+    print(f"[roofline] done, {n_llm_failures} failures")
+    return 1 if (n_llm_failures or failures) else 0
 
 
 if __name__ == "__main__":

@@ -21,6 +21,15 @@ the largest-area tile that fits the 14 MB budget — a 112x112 frame runs as
 one tile (~900 KB), 512x512 splits into two 512x256 tiles (~9 MB each), so
 the acceptance-bar 512 frame genuinely exercises tile seams.
 
+The perf ledger's bytes-moved account (`analysis/mfu.py`,
+`trunk_workload(..., "sweep_megakernel")`) counts this kernel's off-chip
+traffic from the same geometry: n_tiles x (th+HALO)(tw+HALO) input words
+DMA'd HBM->VMEM (the halo apron is genuinely re-read at tile seams) plus
+the 4 x (H/4)(W/4) output quad written back — nothing else leaves the
+core, which is exactly the ~20x byte reduction over the composed sweep's
+per-launch HBM round-trips that the ledger's `mfu`/`achieved_bw` columns
+surface.  `tests/test_mfu.py` pins the model to `choose_tile`/`HALO`.
+
 Geometry contract (loud, tested in tests/test_frame_trunk_props.py): the
 frame must have H % 4 == W % 4 == 0 and be at least 4x4 — the same pooled
 lattice the sweep itself requires — and saturating fixed-point configs are

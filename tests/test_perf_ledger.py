@@ -1,21 +1,38 @@
-"""perf_ledger.check(): the gate must be symmetric — a row missing from
-either side (committed ledger or fresh measurement) is a failure."""
+"""perf_ledger gates: `validate` (committed schema + MFU invariants),
+`check` (symmetric row presence, launch topology, FPS band), ledger
+discovery, and the cross-PR MFU delta report — all on synthetic ledgers,
+no measurement."""
 import copy
+import json
 
-from benchmarks.perf_ledger import FPS_BAND, check
+from benchmarks.perf_ledger import (FPS_BAND, MFU_KEYS, ROW_KEYS,
+                                    SCHEMA_VERSION, check, ledger_paths,
+                                    mfu_deltas, newest_ledger, validate)
+
+
+def _row(**kw):
+    row = {"sustained_fps": 100.0, "latency_p50_ms": 5.0,
+           "latency_p99_ms": 9.0, "drop_rate": 0.0,
+           "trunk_launches_per_frame": 1, "program_launches_per_frame": 3,
+           "model_flops_per_frame": 531848, "bytes_per_frame": 101468,
+           "device_ms_per_frame": 2.0, "achieved_flops": 2.6e8,
+           "achieved_bw": 5.0e7, "mfu": 0.4, "mfu_basis": "roofline_model"}
+    row.update(kw)
+    return row
 
 
 def _ledger():
-    row = {"sustained_fps": 100.0, "latency_p50_ms": 5.0,
-           "latency_p99_ms": 9.0, "drop_rate": 0.0,
-           "trunk_launches_per_frame": 1, "program_launches_per_frame": 3}
-    composed = dict(row, trunk_launches_per_frame=33,
-                    program_launches_per_frame=35)
+    composed = _row(trunk_launches_per_frame=33,
+                    program_launches_per_frame=35,
+                    model_flops_per_frame=523712,
+                    bytes_per_frame=2231224, mfu=0.02)
     return {
-        "config": {"frames": 16, "seed": 7},
+        "config": {"schema_version": SCHEMA_VERSION, "frames": 16,
+                   "seed": 7},
+        "context": {"device": "cpu", "interpret": True},
         "rows": {
             "fixed": {"sweep_composed": copy.deepcopy(composed),
-                      "sweep_megakernel": copy.deepcopy(row)},
+                      "sweep_megakernel": _row()},
             "ref": {"sweep_composed": copy.deepcopy(composed)},
         },
     }
@@ -23,6 +40,48 @@ def _ledger():
 
 def test_check_passes_on_identical():
     assert check(_ledger(), copy.deepcopy(_ledger())) == []
+
+
+def test_validate_passes_on_wellformed():
+    assert validate(_ledger()) == []
+
+
+def test_validate_flags_schema_version_and_missing_columns():
+    led = _ledger()
+    led["config"]["schema_version"] = 1
+    assert any("schema_version" in f for f in validate(led))
+    led = _ledger()
+    del led["rows"]["fixed"]["sweep_megakernel"]["mfu"]
+    del led["rows"]["fixed"]["sweep_megakernel"]["bytes_per_frame"]
+    fails = validate(led)
+    assert any("missing columns" in f and "mfu" in f for f in fails)
+
+
+def test_validate_flags_mfu_out_of_range():
+    for bad in (0.0, -0.1, 1.5):
+        led = _ledger()
+        led["rows"]["ref"]["sweep_composed"]["mfu"] = bad
+        assert any("outside (0, 1]" in f for f in validate(led)), bad
+    led = _ledger()
+    led["rows"]["ref"]["sweep_composed"]["mfu"] = 1.0   # inclusive top
+    assert validate(led) == []
+
+
+def test_validate_flags_megakernel_mfu_not_above_composed():
+    led = _ledger()
+    led["rows"]["fixed"]["sweep_megakernel"]["mfu"] = 0.01   # < composed
+    assert any("worse-utilized" in f for f in validate(led))
+    led["rows"]["fixed"]["sweep_megakernel"]["mfu"] = 0.02   # tie fails too
+    assert any("worse-utilized" in f for f in validate(led))
+
+
+def test_validate_flags_bad_basis_and_nonpositive_counts():
+    led = _ledger()
+    led["rows"]["ref"]["sweep_composed"]["mfu_basis"] = "vibes"
+    assert any("unknown mfu_basis" in f for f in validate(led))
+    led = _ledger()
+    led["rows"]["ref"]["sweep_composed"]["bytes_per_frame"] = 0
+    assert any("must be positive" in f for f in validate(led))
 
 
 def test_check_flags_fresh_row_missing_from_ledger():
@@ -58,8 +117,46 @@ def test_check_flags_launch_topology_drift_and_fps_band():
     assert any("regressed past" in f for f in check(committed, fresh))
 
 
+def test_check_flags_fresh_mfu_out_of_range():
+    committed, fresh = _ledger(), _ledger()
+    fresh["rows"]["ref"]["sweep_composed"]["mfu"] = 1.2
+    assert any("freshly measured mfu" in f for f in check(committed, fresh))
+
+
 def test_check_config_drift_short_circuits():
     committed, fresh = _ledger(), _ledger()
     committed["config"]["frames"] = 8
     fails = check(committed, fresh)
     assert len(fails) == 1 and "config drifted" in fails[0]
+
+
+def test_ledger_discovery_and_committed_ledger_roundtrip():
+    """The repo's own committed ledgers: discovery orders them by PR, the
+    newest passes the full schema gate, and a write -> validate round-trip
+    through JSON is idempotent."""
+    paths = ledger_paths()
+    assert [p.name for p in paths] == sorted(
+        (p.name for p in paths),
+        key=lambda n: int(n.split("_")[1].split(".")[0]))
+    newest = newest_ledger()
+    assert newest is not None and newest == paths[-1]
+    led = json.loads(newest.read_text())
+    assert validate(led) == []
+    assert validate(json.loads(json.dumps(led))) == []
+    for routes in led["rows"].values():
+        for row in routes.values():
+            assert all(k in row for k in ROW_KEYS + MFU_KEYS)
+
+
+def test_mfu_deltas_report():
+    prev, cur = _ledger(), _ledger()
+    cur["rows"]["fixed"]["sweep_megakernel"]["mfu"] = 0.5
+    lines = mfu_deltas(prev, cur)
+    assert any("fixed/sweep_megakernel" in ln and "+25.0%" in ln
+               for ln in lines)
+    # a previous ledger without mfu columns degrades to "(no previous)"
+    for routes in prev["rows"].values():
+        for row in routes.values():
+            del row["mfu"]
+    assert all("no previous" in ln for ln in mfu_deltas(prev, cur))
+    assert all("no previous" in ln for ln in mfu_deltas(None, cur))
