@@ -36,6 +36,11 @@ load-side twin of the perf ledger's per-route `mfu` column.
 
     PYTHONPATH=src python -m benchmarks.goodput_table --smoke
     PYTHONPATH=src python -m benchmarks.goodput_table --full   # + diurnal
+    PYTHONPATH=src python -m benchmarks.goodput_table --smoke --trace
+
+`--trace` records request/batch spans for every row (`repro/obs`) and
+dumps `goodput_trace.jsonl` + `goodput_metrics.prom` under `--trace-dir`
+— the serving-side observability artifacts next to the stream table's.
 """
 from __future__ import annotations
 
@@ -234,7 +239,20 @@ def main() -> None:
                     help="arrivals per row (default: 1500 smoke / 4000 full)")
     ap.add_argument("--floor-ms", type=float, default=FLOOR_MS,
                     help="per-step service floor; 0 = raw hardware capacity")
+    ap.add_argument("--trace", action="store_true",
+                    help="record request/batch spans for every row and dump "
+                         "goodput_trace.jsonl + goodput_metrics.prom under "
+                         "--trace-dir")
+    ap.add_argument("--trace-dir", default="traces",
+                    help="directory for --trace artifacts")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as T
+        # every row's requests land in one ring (capacity sized for the
+        # full smoke row set: ~18k requests x 2 spans + batch spans)
+        tracer = T.enable(capacity=1 << 18, dump_dir=args.trace_dir)
 
     from repro.streaming.loadgen import PROCESSES
     processes = PROCESSES if args.full else SMOKE_PROCESSES
@@ -256,6 +274,22 @@ def main() -> None:
               f"p99_ms={s.get('latency_p99_ms', 0.0):.2f} "
               f"mfu_load={mfu_s} "
               f"shed_by={s['shed_by_reason']}")
+
+    if tracer is not None:
+        import os
+
+        from repro.obs import recorder as R
+        from repro.obs import trace as T
+        jsonl = tracer.recorder.dump_jsonl(
+            os.path.join(args.trace_dir, "goodput_trace.jsonl"),
+            reason="goodput_table",
+            detail=f"requests={n} processes={','.join(processes)}")
+        prom = R.dump_prometheus(
+            os.path.join(args.trace_dir, "goodput_metrics.prom"))
+        print(f"goodput/trace_artifacts,,jsonl={jsonl} prom={prom} "
+              f"spans={len(tracer.recorder)} "
+              f"evicted={tracer.recorder.evicted}")
+        T.disable()
 
     failures = gate(rows) if args.smoke else []
     for f in failures:

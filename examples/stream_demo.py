@@ -13,14 +13,21 @@ trunk runs ONCE per frame on device and every window is scored from the
 pooled feature map — identical detections (word-exact on the fixed
 substrates), finer stride, no host patch extraction.
 
+With `--trace` the run records per-frame spans (`repro/obs`): after the
+clip, the first few frames are printed as ASCII waterfalls — frame root,
+tile/infer/aggregate stages, engine queue-wait and device-step — and the
+whole flight-recorder ring is dumped to `stream_demo_trace.jsonl`.
+
     PYTHONPATH=src python examples/stream_demo.py [--backend fixed_pallas]
-        [--frames 50] [--fps 10] [--no-train] [--sweep]
+        [--frames 50] [--fps 10] [--no-train] [--sweep] [--trace]
 """
 import argparse
 
 import jax
 
 from repro.core import backends, deploy, smallnet
+from repro.obs import recorder as obs_recorder
+from repro.obs import trace as obs_trace
 from repro.serving.vision_engine import VisionEngine
 from repro.streaming.fcn_sweep import FcnSweep
 from repro.streaming.pipeline import StreamConfig, StreamingPipeline
@@ -49,7 +56,17 @@ def main():
     ap.add_argument("--no-train", action="store_true",
                     help="skip training (random weights; detections are "
                          "arbitrary but the pipeline mechanics are real)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-frame spans; print waterfalls for the "
+                         "first frames and dump stream_demo_trace.jsonl")
+    ap.add_argument("--trace-dir", default=".",
+                    help="directory for the --trace dump")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        tracer = obs_trace.enable(capacity=1 << 17,
+                                  dump_dir=args.trace_dir)
 
     if args.no_train:
         params = smallnet.init_params(jax.random.key(0))
@@ -100,6 +117,24 @@ def main():
           f"detections={s['detections_total']}")
     print(f"   accounted={'OK' if s['accounted'] else 'LOST FRAMES'} "
           f"(in == served + dropped)")
+
+    if tracer is not None:
+        import os
+        spans = tracer.recorder.spans()
+        print("== trace waterfalls (first 3 frames) ==")
+        trace_ids = []
+        for sp in spans:                      # keep first-seen frame order
+            if sp.name == "frame" and sp.trace_id not in trace_ids:
+                trace_ids.append(sp.trace_id)
+        for tid in trace_ids[:3]:
+            print(obs_recorder.waterfall(spans, tid, max_spans=24))
+        path = tracer.recorder.dump_jsonl(
+            os.path.join(args.trace_dir, "stream_demo_trace.jsonl"),
+            reason="stream_demo",
+            detail=f"frames={args.frames} backend={args.backend}")
+        print(f"== trace dumped: {path} ({len(spans)} spans, "
+              f"{tracer.recorder.evicted} evicted) ==")
+        obs_trace.disable()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Runtime observability: spans, metrics, and the flight recorder.
+
+Three small, dependency-free layers the whole serving stack threads
+through:
+
+  obs.metrics   process-wide registry of counters / gauges / fixed-bucket
+                histograms (bounded memory by construction) + the ONE
+                nearest-rank percentile helper every latency summary in
+                the repo routes through, and a Prometheus text exporter.
+  obs.trace     lightweight spans (monotonic clock, parent ids, frame /
+                request trace ids, tags).  Disabled by default: every
+                instrumentation site costs one `trace.get()` + None check
+                until `trace.enable()` flips it on.
+  obs.recorder  a bounded ring of recently finished spans that dumps
+                itself (JSONL) when tripped — SLO violation, ledger
+                invariant failure — plus the span/ledger reconciliation
+                check the CI trace smoke gates on.
+
+See README "Observability" for the span taxonomy and artifact formats.
+"""
+from repro.obs import metrics, recorder, trace  # noqa: F401

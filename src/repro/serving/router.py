@@ -61,6 +61,8 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as M
+from repro.obs import trace as T
 from repro.serving.vision_engine import (VisionEngine, VisionResult,
                                          latency_stats)
 
@@ -92,6 +94,7 @@ class _Pending:
     image: np.ndarray
     t_submit: float
     deadline_ms: float | None = None
+    parent_span: object = None        # caller's trace context (frame span)
 
 
 class ReplicaRouter:
@@ -124,11 +127,17 @@ class ReplicaRouter:
         self._results: dict[int, RoutedResult] = {}
         self._assignment: dict[int, int] = {}      # uid -> replica (pending)
         self._shed: dict[int, str] = {}            # uid -> reason (unfetched)
-        self._shed_counts: dict[str, int] = {}
+        # registry-backed fleet ledger + BOUNDED latency reservoir (the raw
+        # per-request list used to grow forever — same retention class as
+        # the engine's); see repro/obs/metrics.py
+        self._id = M.instance_label("router")
+        reg = M.REGISTRY
+        self._m_submitted = reg.counter("router_submitted", router=self._id)
+        self._m_served = reg.counter("router_served", router=self._id)
+        self._m_shed: dict[str, M.Counter] = {}    # reason -> Counter
+        self._lat_hist = reg.histogram("router_latency_seconds",
+                                       router=self._id)
         self._served_by: dict[int, int] = {i: 0 for i in range(len(replicas))}
-        self._latencies: list[float] = []
-        self._submitted = 0
-        self._served_total = 0
         self._deadline_total = 0
         self._deadline_ok = 0
         self._idle_ticks = 0
@@ -209,40 +218,65 @@ class ReplicaRouter:
 
     def submit(self, image: np.ndarray, *,
                deadline_ms: float | None = None,
-               t_submit: float | None = None) -> int:
+               t_submit: float | None = None,
+               parent_span: object = None) -> int:
         """Route one image per the dispatch policy; returns a fleet-global
         uid immediately.  Under the "slo" policy a request the fleet cannot
         plausibly serve in time is shed at the door (reason "slo_wait").
         `t_submit` lets an open-loop replay harness stamp the request with
         its scheduled arrival time (the engine deadline then counts from
-        intended arrival, not generator lag)."""
+        intended arrival, not generator lag).  With tracing on, every
+        routing decision emits a point span "dispatch" — chosen replica,
+        policy, projected wait — nested under `parent_span` when given, so
+        a frame's waterfall shows WHERE it was sent and a door-shed request
+        carries the span where it died."""
+        tr = T.get()
         with self._lock:
             dl = deadline_ms if deadline_ms is not None else self.slo_ms
             i, shed = self._pick(dl)   # may raise FleetExhaustedError:
             uid = self._next_uid       # counters move only once admitted
             self._next_uid += 1
-            self._submitted += 1
+            self._m_submitted.inc()
             if dl is not None:
                 self._deadline_total += 1
             if shed is not None:
+                if tr is not None:
+                    tr.point("dispatch", (parent_span.trace_id
+                                          if parent_span is not None
+                                          else f"rreq-{self._id}-{uid}"),
+                             f"shed:{shed}", parent=parent_span,
+                             uid=uid, policy=self.policy, router=self._id)
                 self._shed_uid_locked(uid, shed)
                 return uid
+            if tr is not None:
+                tr.point("dispatch", (parent_span.trace_id
+                                      if parent_span is not None
+                                      else f"rreq-{self._id}-{uid}"),
+                         parent=parent_span, uid=uid, replica=i,
+                         policy=self.policy, router=self._id)
             self._assignment[uid] = i
             now = (time.perf_counter() if t_submit is None
                    else float(t_submit))
             self._pending[i].append(_Pending(
                 uid=uid, image=np.asarray(image, np.float32),
-                t_submit=now, deadline_ms=dl))
+                t_submit=now, deadline_ms=dl, parent_span=parent_span))
             self._lock.notify_all()
             return uid
 
     def submit_many(self, images: Iterable[np.ndarray], *,
-                    deadline_ms: float | None = None) -> list[int]:
-        return [self.submit(img, deadline_ms=deadline_ms) for img in images]
+                    deadline_ms: float | None = None,
+                    parent_span: object = None) -> list[int]:
+        return [self.submit(img, deadline_ms=deadline_ms,
+                            parent_span=parent_span) for img in images]
 
     def _shed_uid_locked(self, uid: int, reason: str) -> None:
         self._shed[uid] = reason
-        self._shed_counts[reason] = self._shed_counts.get(reason, 0) + 1
+        c = self._m_shed.get(reason)
+        if c is None:
+            c = M.REGISTRY.counter("router_shed", reason=reason,
+                                   router=self._id)
+            self._m_shed[reason] = c
+        c.inc()
         self._assignment.pop(uid, None)
         self._lock.notify_all()
 
@@ -268,7 +302,8 @@ class ReplicaRouter:
                 # stamp the engine request with the ROUTER submit time so
                 # engine latency/deadlines measure what the client observes
                 local[eng.submit(p.image, deadline_ms=p.deadline_ms,
-                                 t_submit=p.t_submit)] = p
+                                 t_submit=p.t_submit,
+                                 parent_span=p.parent_span)] = p
             eng.run()
         except Exception as e:        # noqa: BLE001 — any replica fault fails over
             error = e
@@ -295,9 +330,9 @@ class ReplicaRouter:
         with self._lock:
             self._results.update(routed)
             for uid, rr in routed.items():
-                self._served_total += 1
+                self._m_served.inc()
                 self._served_by[i] = self._served_by.get(i, 0) + 1
-                self._latencies.append(rr.latency_s)
+                self._lat_hist.observe(rr.latency_s)
                 self._assignment.pop(uid, None)
             for uid, reason in shed_here.items():
                 self._shed_uid_locked(uid, reason)
@@ -318,7 +353,7 @@ class ReplicaRouter:
         """Drain every replica concurrently; fail unserved requests over to
         survivors until everything is served (or shed) or the fleet is
         exhausted.  Returns total #requests served this call."""
-        served_before = self._served_total
+        served_before = self._m_served.value
         while True:
             with self._lock:
                 # reclaim lanes stranded on dead replicas: a concurrent
@@ -341,7 +376,7 @@ class ReplicaRouter:
                 continue              # loop once more in case of re-routes
             with self._lock:
                 self._redistribute(unserved)
-        return self._served_total - served_before
+        return self._m_served.value - served_before
 
     def _redistribute(self, orphans: list[_Pending]) -> None:
         """Spread failed-over requests across the survivors, shallowest lane
@@ -546,7 +581,10 @@ class ReplicaRouter:
         rates (replicas serve in parallel), each measured over that
         replica's busy time — idle gaps never deflate it."""
         with self._lock:
-            shed_total = sum(self._shed_counts.values())
+            submitted = self._m_submitted.value
+            served = self._m_served.value
+            shed_by = {r: c.value for r, c in sorted(self._m_shed.items())}
+            shed_total = sum(shed_by.values())
             # lanes (incl. ones stranded on dead replicas — run() reclaims
             # those) + live engines' queues.  A DEAD replica's engine queue
             # is excluded: whatever it still holds was already failed over.
@@ -555,6 +593,7 @@ class ReplicaRouter:
                              for i in range(len(self.replicas))
                              if i not in self._errors))
             failed = sorted(self._errors)
+            accounted = submitted == served + shed_total + pending
             out = {
                 "replicas": len(self.replicas),
                 "healthy": len(self.healthy_replicas()),
@@ -562,14 +601,13 @@ class ReplicaRouter:
                 "failed": failed,
                 "policy": self.policy,
                 "slo_ms": self.slo_ms,
-                "n": self._served_total,
-                "submitted": self._submitted,
+                "n": served,
+                "submitted": submitted,
                 "shed": shed_total,
-                "shed_by_reason": dict(sorted(self._shed_counts.items())),
+                "shed_by_reason": shed_by,
                 "pending": pending,
                 # the fleet-level no-silent-loss invariant
-                "accounted": self._submitted
-                == self._served_total + shed_total + pending,
+                "accounted": accounted,
                 "per_replica": [eng.stats() for eng in self.replicas],
                 "served_by": dict(sorted(self._served_by.items())),
             }
@@ -577,9 +615,17 @@ class ReplicaRouter:
                 out["deadline_total"] = self._deadline_total
                 out["served_within_deadline"] = self._deadline_ok
                 out["goodput"] = self._deadline_ok / self._deadline_total
-            if self._served_total:
+            if served:
                 busy = sum(r["busy_s"] for r in out["per_replica"])
-                out.update(latency_stats(self._latencies, busy))
+                out.update(latency_stats(self._lat_hist.samples(), busy))
                 rates = [eng.service_rate_qps() for eng in self.replicas]
                 out["throughput_qps"] = float(sum(r for r in rates if r))
-            return out
+        if not accounted:
+            tr = T.get()
+            if tr is not None:
+                tr.recorder.trip(
+                    "ledger_invariant",
+                    f"router {self._id}: submitted={submitted} != "
+                    f"served={served} + shed={shed_total} + "
+                    f"pending={pending}")
+        return out

@@ -71,6 +71,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import backends as B
 from repro.core import smallnet
 from repro.distributed import sharding as shd
+from repro.obs import metrics as M
+from repro.obs import trace as T
 
 
 def latency_stats(latencies_s, window_s: float) -> dict:
@@ -78,20 +80,10 @@ def latency_stats(latencies_s, window_s: float) -> dict:
     mean/p50/p95/p99/max in ms + qps over the `window_s`-second serving
     window.  A zero-length window yields 0.0 qps (a single instantaneous
     batch has no measurable rate — never inf); an empty latency set raises
-    (callers must guard the n == 0 case explicitly)."""
-    lat = np.asarray(latencies_s, np.float64)
-    if lat.size == 0:
-        raise ValueError(
-            "latency_stats: empty latency set — an all-shed or never-run "
-            "window has no latency distribution; guard n == 0 at the caller")
-    return {
-        "latency_mean_ms": float(lat.mean() * 1e3),
-        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
-        "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
-        "latency_max_ms": float(lat.max() * 1e3),
-        "throughput_qps": float(lat.size / window_s) if window_s > 0 else 0.0,
-    }
+    (callers must guard the n == 0 case explicitly).  Percentiles are
+    NEAREST-RANK via the one shared helper (`obs.metrics.percentile`) —
+    the same semantics as every other latency summary in the repo."""
+    return M.summarize_latency(latencies_s, window_s)
 
 
 class EngineFaultError(RuntimeError):
@@ -106,6 +98,7 @@ class VisionRequest:
     image: np.ndarray                 # (28, 28, 1) float32
     t_submit: float = 0.0
     deadline: float | None = None     # absolute perf_counter time, or None
+    parent_span: Any = None           # caller's trace context (traced runs)
 
 
 @dataclasses.dataclass
@@ -186,18 +179,29 @@ class VisionEngine:
         self._queue: collections.deque[VisionRequest] = collections.deque()
         self._results: dict[int, VisionResult] = {}
         self._shed: dict[int, str] = {}            # uid -> reason (unfetched)
-        self._shed_counts: dict[str, int] = {}
+        # -- registry-backed accounting (repro/obs/metrics.py): the ledger
+        # counters, queue-depth gauge, and latency histogram live in the
+        # process-wide registry under this engine's unique instance label
+        # (Prometheus-exportable, bounded memory — the latency list used to
+        # grow per request forever).  stats() reads these back; the ledger
+        # invariant submitted == served + shed + pending is computed over
+        # the counter values.
+        self._id = M.instance_label(f"eng-{self.backend.name}")
+        reg = M.REGISTRY
+        labels = {"engine": self._id, "backend": self.backend.name}
+        self._m_submitted = reg.counter("engine_submitted", **labels)
+        self._m_served = reg.counter("engine_served", **labels)
+        self._m_shed: dict[str, M.Counter] = {}    # reason -> Counter
+        self._m_batches = reg.counter("engine_batches", **labels)
+        self._m_padded = reg.counter("engine_padded_slots", **labels)
+        self._m_busy = reg.counter("engine_busy_seconds", **labels)
+        self._m_queue = reg.gauge("engine_queue_depth", **labels)
+        self._m_occupancy = reg.gauge("engine_batch_occupancy", **labels)
+        self._lat_hist = reg.histogram("engine_latency_seconds", **labels)
         self._next_uid = 0
-        self._submitted = 0
-        self._served = 0
         self._in_flight = 0
-        self._latencies: list[float] = []
         self._deadline_total = 0                   # submits that carried one
         self._deadline_ok = 0                      # ...served in time
-        self._batches_run = 0
-        self._padded_slots = 0
-        self._busy_s = 0.0                         # sum of per-step windows
-        self._queue_hwm = 0
         self._t_first_submit: float | None = None
         self._t_last_done: float | None = None
         self._thread: threading.Thread | None = None
@@ -233,18 +237,24 @@ class VisionEngine:
     # -- request side -------------------------------------------------------
 
     def submit(self, image: np.ndarray, *, deadline_ms: float | None = None,
-               t_submit: float | None = None) -> int:
+               t_submit: float | None = None, parent_span: Any = None) -> int:
         """Queue one image; returns its uid immediately (async).  A request
         past the admission bound (or to a faulted engine) is SHED — the uid
         resolves via `pop_shed()` instead of `pop_results()`, so accounting
         always reconciles.  `t_submit` lets an open-loop replay harness
         stamp the request with its scheduled arrival time (latency and
-        deadlines then measure from intended arrival, not generator lag)."""
+        deadlines then measure from intended arrival, not generator lag).
+        With tracing on, the request yields a root "request" span (exactly
+        one terminal state, served/shed:<reason>) nested under
+        `parent_span` when the caller supplies its own trace context (the
+        streaming pipeline passes the frame's root span).  The span is
+        materialized at the request's terminal point from the timestamps
+        the engine records anyway — submit itself does no tracer work."""
         img = np.asarray(image, np.float32).reshape(self.image_shape)
         with self._cond:
             uid = self._next_uid
             self._next_uid += 1
-            self._submitted += 1
+            self._m_submitted.inc()
             now = time.perf_counter() if t_submit is None else float(t_submit)
             if self._t_first_submit is None:
                 self._t_first_submit = now
@@ -252,26 +262,55 @@ class VisionEngine:
                      else self.default_deadline_ms)
             if dl_ms is not None:
                 self._deadline_total += 1
+            # Tracing adds NOTHING here: the request path records plain
+            # floats (t_submit) and the caller's span ref; the "request" /
+            # "queue_wait" spans are materialized at their terminal point
+            # (step completion or shed) via Tracer.emit, keeping the
+            # submit critical path span-free.
             if self._fault is not None:
-                self._shed_locked(uid, "fault")
+                self._shed_locked(uid, "fault", now, now,
+                                  parent_span=parent_span)
             elif (self.max_queue is not None
                     and len(self._queue) >= self.max_queue):
-                self._shed_locked(uid, "queue_depth")
+                self._shed_locked(uid, "queue_depth", now, now,
+                                  parent_span=parent_span)
             else:
                 deadline = now + dl_ms / 1e3 if dl_ms is not None else None
                 self._queue.append(VisionRequest(
-                    uid=uid, image=img, t_submit=now, deadline=deadline))
-                self._queue_hwm = max(self._queue_hwm, len(self._queue))
+                    uid=uid, image=img, t_submit=now, deadline=deadline,
+                    parent_span=parent_span))
+                self._m_queue.set(len(self._queue))
                 self._cond.notify_all()
             return uid
 
     def submit_many(self, images: Iterable[np.ndarray], *,
-                    deadline_ms: float | None = None) -> list[int]:
-        return [self.submit(img, deadline_ms=deadline_ms) for img in images]
+                    deadline_ms: float | None = None,
+                    parent_span: Any = None) -> list[int]:
+        return [self.submit(img, deadline_ms=deadline_ms,
+                            parent_span=parent_span) for img in images]
 
-    def _shed_locked(self, uid: int, reason: str) -> None:
+    def _shed_locked(self, uid: int, reason: str,
+                     t_submit: float, t_end: float, *,
+                     parent_span: Any = None, queued: bool = False) -> None:
         self._shed[uid] = reason
-        self._shed_counts[reason] = self._shed_counts.get(reason, 0) + 1
+        c = self._m_shed.get(reason)
+        if c is None:
+            c = M.REGISTRY.counter("engine_shed", reason=reason,
+                                   engine=self._id,
+                                   backend=self.backend.name)
+            self._m_shed[reason] = c
+        c.inc()
+        tr = T.get()
+        if tr is not None:
+            tid = (parent_span.trace_id if parent_span is not None
+                   else f"req-{self._id}-{uid}")
+            span = tr.emit("request", tid, t_submit, t_end,
+                           f"shed:{reason}", parent=parent_span, uid=uid,
+                           engine=self._id)
+            if queued:   # the request sat in the queue before being shed
+                tr.emit("queue_wait", tid, t_submit, t_end,
+                        "expired" if reason in ("deadline", "age") else "ok",
+                        parent=span)
         self._cond.notify_all()
 
     # -- serving side -------------------------------------------------------
@@ -285,29 +324,47 @@ class VisionEngine:
         while self._queue and len(reqs) < self.batch_size:
             r = self._queue.popleft()
             if r.deadline is not None and now > r.deadline:
-                self._shed_locked(r.uid, "deadline")
+                self._shed_locked(r.uid, "deadline", r.t_submit, now,
+                                  parent_span=r.parent_span, queued=True)
             elif (self.max_age_ms is not None
                     and (now - r.t_submit) * 1e3 > self.max_age_ms):
-                self._shed_locked(r.uid, "age")
+                self._shed_locked(r.uid, "age", r.t_submit, now,
+                                  parent_span=r.parent_span, queued=True)
             else:
                 reqs.append(r)
+        self._m_queue.set(len(self._queue))
         return reqs
 
     def step(self) -> int:
         """Serve one continuous batch: coalesce whatever is queued (up to
         batch_size), pad, run the jitted step, record results. Returns
         #requests served (sheds don't count)."""
+        tr = T.get()
+        batch_idx = self._m_batches.value
+        bf = (tr.start("batch_form", f"step-{self._id}-{batch_idx}",
+                       batch_index=batch_idx, engine=self._id)
+              if tr is not None else None)
         with self._cond:
             reqs = self._form_batch_locked()
             if not reqs:
+                if bf is not None:
+                    tr.end(bf, n_formed=0)
                 return 0
             self._in_flight = len(reqs)
+        if bf is not None:
+            tr.end(bf, n_formed=len(reqs))
         t0 = time.perf_counter()
+        ds = (tr.start("device_step", f"step-{self._id}-{batch_idx}",
+                       batch_index=batch_idx, engine=self._id,
+                       n_real=len(reqs),
+                       padded=self.batch_size - len(reqs))
+              if tr is not None else None)
         try:
             batch = np.zeros((self.batch_size,) + self.image_shape, np.float32)
             for i, r in enumerate(reqs):
                 batch[i] = r.image
-            with self._mesh_ctx():
+            with self._mesh_ctx(), T.device_step_annotation(
+                    f"vision_step/{self.backend.name}"):
                 scores = self._step_fn(self.params, jnp.asarray(batch))
                 scores.block_until_ready()
         except Exception:
@@ -315,34 +372,57 @@ class VisionEngine:
             # losing it: submitted == served + shed + pending must survive
             # replica death (the router treats "fault" sheds as unserved
             # and fails them over)
+            if ds is not None:
+                tr.end(ds, "error")
             with self._cond:
                 self._in_flight = 0
+                now = time.perf_counter()
                 for r in reqs:
-                    self._shed_locked(r.uid, "fault")
+                    self._shed_locked(r.uid, "fault", r.t_submit, now,
+                                      parent_span=r.parent_span, queued=True)
             raise
         t_done = time.perf_counter()
         if self.min_step_s > 0.0 and t_done - t0 < self.min_step_s:
             time.sleep(self.min_step_s - (t_done - t0))
             t_done = time.perf_counter()     # the floor IS the service time
+        if ds is not None:
+            tr.end(ds)
         preds = np.asarray(smallnet.predict(scores))
         scores_np = np.asarray(scores)
         with self._cond:
-            self._busy_s += t_done - t0
+            self._m_busy.inc(t_done - t0)
             self._t_last_done = t_done
             for i, r in enumerate(reqs):
                 res = VisionResult(
                     uid=r.uid, pred=int(preds[i]), scores=scores_np[i],
                     t_submit=r.t_submit, t_done=t_done,
-                    batch_index=self._batches_run, deadline=r.deadline)
+                    batch_index=batch_idx, deadline=r.deadline)
                 self._results[r.uid] = res
-                self._latencies.append(res.latency_s)
+                self._lat_hist.observe(res.latency_s)
                 if r.deadline is not None and t_done <= r.deadline:
                     self._deadline_ok += 1
-            self._served += len(reqs)
-            self._batches_run += 1
-            self._padded_slots += self.batch_size - len(reqs)
+            self._m_served.inc(len(reqs))
+            self._m_batches.inc()
+            self._m_padded.inc(self.batch_size - len(reqs))
+            slots = self._m_batches.value * self.batch_size
+            self._m_occupancy.set((slots - self._m_padded.value) / slots)
             self._in_flight = 0
             self._cond.notify_all()
+        if tr is not None:
+            # materialize the batch's request/queue_wait spans AFTER the
+            # waiters are released, from timestamps the engine recorded
+            # anyway (t_submit, batch formation, t_done): the traced submit
+            # path allocates nothing, and t_done precedes the frame root's
+            # end so parent-window nesting still holds
+            t_formed = bf.t_end if bf is not None else t0
+            for r in reqs:
+                tid = (r.parent_span.trace_id if r.parent_span is not None
+                       else f"req-{self._id}-{r.uid}")
+                span = tr.emit("request", tid, r.t_submit, t_done, "served",
+                               parent=r.parent_span, uid=r.uid,
+                               batch_index=batch_idx)
+                tr.emit("queue_wait", tid, r.t_submit, t_formed,
+                        parent=span)
         return len(reqs)
 
     def run(self) -> int:
@@ -385,8 +465,12 @@ class VisionEngine:
             except Exception as e:   # noqa: BLE001 — any step fault kills serving
                 with self._cond:
                     self._fault = e
+                    now = time.perf_counter()
                     while self._queue:     # nothing will ever serve these
-                        self._shed_locked(self._queue.popleft().uid, "fault")
+                        r = self._queue.popleft()
+                        self._shed_locked(r.uid, "fault", r.t_submit, now,
+                                          parent_span=r.parent_span,
+                                          queued=True)
                     self._cond.notify_all()
                 return
 
@@ -398,8 +482,11 @@ class VisionEngine:
             thread = self._thread
             self._stop_flag = True
             if not drain:
+                now = time.perf_counter()
                 while self._queue:
-                    self._shed_locked(self._queue.popleft().uid, "stopped")
+                    r = self._queue.popleft()
+                    self._shed_locked(r.uid, "stopped", r.t_submit, now,
+                                      parent_span=r.parent_span, queued=True)
             self._cond.notify_all()
         if thread is not None:
             thread.join(timeout=60.0)
@@ -489,12 +576,13 @@ class VisionEngine:
                     if u in self._shed}
 
     def serve(self, images: Iterable[np.ndarray], *,
-              deadline_ms: float | None = None
+              deadline_ms: float | None = None, parent_span: Any = None
               ) -> list["VisionResult | None"]:
         """Convenience client loop: submit a workload, wait for it, pop the
         results, return them in submission order (None where a request was
         shed).  Works with or without the serving thread."""
-        uids = self.submit_many(images, deadline_ms=deadline_ms)
+        uids = self.submit_many(images, deadline_ms=deadline_ms,
+                                parent_span=parent_span)
         self.wait(uids)
         res = self.pop_results(uids)
         self.pop_shed(uids)
@@ -512,45 +600,53 @@ class VisionEngine:
         (idle gaps excluded).  None before any serving history exists —
         the router's dispatch falls back to fleet statistics then."""
         with self._cond:
-            if self._busy_s <= 0 or self._served == 0:
+            if self._m_busy.value <= 0 or self._m_served.value == 0:
                 return None
-            return self._served / self._busy_s
+            return self._m_served.value / self._m_busy.value
 
     def stats(self) -> dict:
         """Per-request latency distribution + engine throughput + the
-        admission ledger (submitted == served + shed + pending)."""
+        admission ledger (submitted == served + shed + pending), read back
+        from the registry instruments.  A broken ledger trips the flight
+        recorder (when tracing is on) before it is reported."""
         with self._cond:
-            shed_total = sum(self._shed_counts.values())
+            submitted = self._m_submitted.value
+            served = self._m_served.value
+            shed_by = {r: c.value for r, c in sorted(self._m_shed.items())}
+            shed_total = sum(shed_by.values())
             pending = len(self._queue) + self._in_flight
-            slots = self._batches_run * self.batch_size
+            batches = self._m_batches.value
+            padded = self._m_padded.value
+            busy = self._m_busy.value
+            slots = batches * self.batch_size
             wall = ((self._t_last_done or 0.0)
-                    - (self._t_first_submit or 0.0)) if self._served else 0.0
+                    - (self._t_first_submit or 0.0)) if served else 0.0
+            accounted = submitted == served + shed_total + pending
             out = {
                 "backend": self.backend.name,
-                "n": self._served,
-                "submitted": self._submitted,
+                "n": served,
+                "submitted": submitted,
                 "shed": shed_total,
-                "shed_by_reason": dict(sorted(self._shed_counts.items())),
+                "shed_by_reason": shed_by,
                 "pending": pending,
                 # the engine-level no-silent-loss invariant
-                "accounted":
-                    self._submitted == self._served + shed_total + pending,
+                "accounted": accounted,
                 "batch_size": self.batch_size,
-                "batches": self._batches_run,
-                "padded_slots": self._padded_slots,
+                "batches": batches,
+                "padded_slots": padded,
                 # real images / total slots across every step: the fraction
                 # of compute spent on real work vs zero padding (stream
                 # benchmarks report this as pad waste)
                 "batch_occupancy":
-                    (slots - self._padded_slots) / slots if slots else 0.0,
-                "queue_hwm": self._queue_hwm,
+                    (slots - padded) / slots if slots else 0.0,
+                "queue_hwm": int(self._m_queue.hwm),
                 "mesh_devices": (int(self.mesh.devices.size)
                                  if self.mesh is not None else 1),
                 # busy = sum of per-step serving windows; wall spans idle
                 # gaps too, so throughput is reported over busy time (an
                 # engine serving two bursts an hour apart still reports its
                 # real service rate, not served/3600)
-                "busy_s": self._busy_s,
+                "busy_s": busy,
                 "wall_s": wall,
             }
             if self._deadline_total:
@@ -559,6 +655,18 @@ class VisionEngine:
                 # goodput under the latency SLO: requests answered in time
                 # over everything that asked (sheds count against it)
                 out["goodput"] = self._deadline_ok / self._deadline_total
-            if self._served:
-                out.update(latency_stats(self._latencies, self._busy_s))
-            return out
+            if served:
+                out.update(latency_stats(self._lat_hist.samples(), busy))
+                # percentiles come from the bounded reservoir (recent
+                # window), but throughput must count EVERY served request —
+                # recompute it from the exact counters
+                out["throughput_qps"] = served / busy if busy > 0 else 0.0
+        if not accounted:
+            tr = T.get()
+            if tr is not None:
+                tr.recorder.trip(
+                    "ledger_invariant",
+                    f"engine {self._id}: submitted={submitted} != "
+                    f"served={served} + shed={shed_total} + "
+                    f"pending={pending}")
+        return out

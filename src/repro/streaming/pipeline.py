@@ -30,20 +30,37 @@ Every frame's age is checked against the per-frame deadline at each stage
 boundary; a miss is COUNTED (reason + stage), never silently lost — the
 accounting invariant `frames_in == served + dropped` is part of `stats()`
 and asserted by the CI smoke.
+
+Observability (`repro/obs/`): the per-stage latency distributions and drop
+counters live in the process-wide metrics registry as bounded histograms /
+counters (memory O(1) in clip length — the old per-frame python lists grew
+forever), and with tracing enabled (`obs.trace.enable()`, or `--trace` on
+the benchmarks) every frame carries a root span `frame-<index>` with
+tile/infer/aggregate child spans and EXACTLY one terminal status — "served"
+or "dropped:<stage>/<reason>" — matching the drop ledger, so a shed frame
+carries the span where it died and a served detection explains itself as a
+waterfall.  A deadline miss or a broken ledger trips the flight recorder.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+import inspect
 import time
 from typing import Any
 
 import numpy as np
 
+from repro.obs import metrics as M
+from repro.obs import trace as T
 from repro.streaming.sources import Frame, PacedPlayer
 from repro.streaming.tiler import Detection, Tiler
 
 _SENTINEL = None
+
+# bucket ladder for the per-stage histograms: stages run 0.1 ms (tile
+# bookkeeping in sweep mode) .. seconds (interpret-mode megakernel frames)
+_STAGES = ("tile", "infer", "aggregate")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +92,7 @@ class _Item:
     positions: list | None = None
     scores: np.ndarray | None = None
     stage_s: dict = dataclasses.field(default_factory=dict)
+    span: "T.Span | None" = None           # root "frame" span when traced
 
 
 @dataclasses.dataclass
@@ -117,25 +135,58 @@ class StreamingPipeline:
             self.tiler.score(engine.params,
                              np.zeros((1, H, W, 1), np.float32),
                              backend=engine.backend)
+        # duck-typed engines (tests stub serve(tiles)) may not accept the
+        # trace-context kwarg; detect once instead of try/except per wave
+        serve = getattr(engine, "serve", None)
+        self._serve_takes_span = bool(
+            serve is not None
+            and "parent_span" in inspect.signature(serve).parameters)
         if config.realtime is not None:
             self.realtime = bool(config.realtime)
         else:
             self.realtime = bool(isinstance(source, PacedPlayer)
                                  and source.fps)
         self.results: list[FrameResult] = []
-        self._frames_in = 0
-        self._drops: dict[str, int] = {}           # "stage/reason" -> count
-        self._stage_s: dict[str, list[float]] = {"tile": [], "infer": [],
-                                                 "aggregate": []}
-        self._queue_hwm: dict[str, int] = {}
+        # -- registry-backed accounting: counters/gauges/histograms in the
+        # process-wide registry (bounded memory; `stats()` reads them back,
+        # the Prometheus dump exports them).  One unique instance label per
+        # pipeline so concurrent benchmark rows coexist.
+        self._id = M.instance_label("pipe")
+        reg = M.REGISTRY
+        self._m_frames_in = reg.counter("stream_frames_in", pipe=self._id)
+        self._m_served = reg.counter("stream_frames_served", pipe=self._id)
+        self._m_drops: dict[str, M.Counter] = {}   # "stage/reason" -> Counter
+        self._stage_hist = {k: reg.histogram("stream_stage_seconds",
+                                             stage=k, pipe=self._id)
+                            for k in _STAGES}
+        self._lat_hist = reg.histogram("stream_frame_latency_seconds",
+                                       pipe=self._id)
+        self._m_fps = reg.gauge("stream_achieved_fps", pipe=self._id)
+        self._queue_gauges: dict[str, M.Gauge] = {}
         self._t_first: float | None = None
         self._t_last: float | None = None
 
     # -- accounting ---------------------------------------------------------
 
-    def _drop(self, stage: str, reason: str) -> None:
+    def _drop(self, stage: str, reason: str,
+              item: "_Item | None" = None) -> None:
         key = f"{stage}/{reason}"
-        self._drops[key] = self._drops.get(key, 0) + 1
+        c = self._m_drops.get(key)
+        if c is None:
+            c = M.REGISTRY.counter("stream_frames_dropped", stage=stage,
+                                   reason=reason, pipe=self._id)
+            self._m_drops[key] = c
+        c.inc()
+        if item is not None and item.span is not None:
+            tr = T.get()
+            if tr is not None:
+                tr.end(item.span, f"dropped:{key}")
+                if reason == "deadline":
+                    tr.recorder.trip(
+                        "slo_violation",
+                        f"frame {item.frame.index} missed its "
+                        f"{self.config.deadline_ms} ms deadline at {stage}")
+                item.span = None
 
     def _expired(self, item: _Item, stage: str) -> bool:
         dl = self.config.deadline_ms
@@ -143,7 +194,7 @@ class StreamingPipeline:
             return False
         if (time.perf_counter() - item.t_ingest) * 1e3 <= dl:
             return False
-        self._drop(stage, "deadline")
+        self._drop(stage, "deadline", item)
         return True
 
     async def _admit(self, q: asyncio.Queue, name: str, item: _Item) -> None:
@@ -156,14 +207,19 @@ class StreamingPipeline:
                 q.put_nowait(item)
             except asyncio.QueueFull:
                 if self.config.drop_policy == "oldest":
-                    q.get_nowait()                 # evict the stalest frame
+                    evicted = q.get_nowait()           # evict the stalest
                     q.task_done()
-                    self._drop(name, "queue_full")
+                    self._drop(name, "queue_full", evicted)
                     q.put_nowait(item)
                 else:
-                    self._drop(name, "queue_full")
+                    self._drop(name, "queue_full", item)
                     return
-        self._queue_hwm[name] = max(self._queue_hwm.get(name, 0), q.qsize())
+        g = self._queue_gauges.get(name)
+        if g is None:
+            g = M.REGISTRY.gauge("stream_queue_depth", queue=name,
+                                 pipe=self._id)
+            self._queue_gauges[name] = g
+        g.set(q.qsize())
 
     # -- stages -------------------------------------------------------------
 
@@ -181,11 +237,17 @@ class StreamingPipeline:
         now = time.perf_counter()
         if self._t_first is None:
             self._t_first = now
-        self._frames_in += 1
-        await self._admit(q_tile, "ingest", _Item(frame=frame, t_ingest=now))
+        self._m_frames_in.inc()
+        tr = T.get()
+        span = (tr.start("frame", f"frame-{frame.index}",
+                         index=frame.index, pipe=self._id)
+                if tr is not None else None)
+        await self._admit(q_tile, "ingest",
+                          _Item(frame=frame, t_ingest=now, span=span))
 
     async def _tile_stage(self, q_tile: asyncio.Queue,
                           q_infer: asyncio.Queue) -> None:
+        tr = T.get()
         while True:
             item = await q_tile.get()
             if item is _SENTINEL:
@@ -194,12 +256,16 @@ class StreamingPipeline:
             if self._expired(item, "tile"):
                 continue
             t0 = time.perf_counter()
+            child = (tr.start("tile", item.span.trace_id, parent=item.span)
+                     if tr is not None and item.span is not None else None)
             item.tiles, item.positions = self.tiler.extract(item.frame)
+            if child is not None:
+                tr.end(child, n_tiles=len(item.tiles))
             item.stage_s["tile"] = time.perf_counter() - t0
-            self._stage_s["tile"].append(item.stage_s["tile"])
+            self._stage_hist["tile"].observe(item.stage_s["tile"])
             await self._admit(q_infer, "tile", item)
 
-    def _serve_wave(self, tiles: np.ndarray) -> "np.ndarray | None":
+    def _serve_wave(self, item: _Item) -> "np.ndarray | None":
         """One batched wave through the engine/router (worker thread); in
         sweep mode, one jitted full-frame trunk call instead.  The engine's
         intake stays open across waves (continuous batching) and `serve()`
@@ -208,8 +274,12 @@ class StreamingPipeline:
         the frame's tiles — a partially-scored frame is a dropped frame."""
         eng = self.engine
         if self.sweep:
-            return self.tiler.score(eng.params, tiles, backend=eng.backend)
-        res = eng.serve(list(tiles))
+            return self.tiler.score(eng.params, item.tiles,
+                                    backend=eng.backend)
+        if self._serve_takes_span and item.span is not None:
+            res = eng.serve(list(item.tiles), parent_span=item.span)
+        else:
+            res = eng.serve(list(item.tiles))
         if any(r is None for r in res):
             return None
         return np.stack([r.scores for r in res])
@@ -217,6 +287,7 @@ class StreamingPipeline:
     async def _infer_stage(self, q_infer: asyncio.Queue,
                            q_agg: asyncio.Queue) -> None:
         loop = asyncio.get_running_loop()
+        tr = T.get()
         while True:
             item = await q_infer.get()
             if item is _SENTINEL:
@@ -225,16 +296,23 @@ class StreamingPipeline:
             if self._expired(item, "infer"):
                 continue
             t0 = time.perf_counter()
+            child = (tr.start("infer", item.span.trace_id, parent=item.span,
+                              route="sweep" if self.sweep else "engine")
+                     if tr is not None and item.span is not None else None)
             item.scores = await loop.run_in_executor(
-                None, self._serve_wave, item.tiles)
+                None, self._serve_wave, item)
+            if child is not None:
+                tr.end(child,
+                       "ok" if item.scores is not None else "shed")
             item.stage_s["infer"] = time.perf_counter() - t0
-            self._stage_s["infer"].append(item.stage_s["infer"])
+            self._stage_hist["infer"].observe(item.stage_s["infer"])
             if item.scores is None:
-                self._drop("infer", "shed")        # engine shed >=1 tile
+                self._drop("infer", "shed", item)  # engine shed >=1 tile
                 continue
             await self._admit(q_agg, "infer", item)
 
     async def _agg_stage(self, q_agg: asyncio.Queue) -> None:
+        tr = T.get()
         while True:
             item = await q_agg.get()
             if item is _SENTINEL:
@@ -242,12 +320,22 @@ class StreamingPipeline:
             if self._expired(item, "aggregate"):
                 continue
             t0 = time.perf_counter()
+            child = (tr.start("aggregate", item.span.trace_id,
+                              parent=item.span)
+                     if tr is not None and item.span is not None else None)
             dets = self.tiler.aggregate(item.scores, item.positions,
                                         item.tiles)
+            if child is not None:
+                tr.end(child, n_detections=len(dets))
             t_done = time.perf_counter()
             item.stage_s["aggregate"] = t_done - t0
-            self._stage_s["aggregate"].append(item.stage_s["aggregate"])
+            self._stage_hist["aggregate"].observe(item.stage_s["aggregate"])
             self._t_last = t_done
+            self._m_served.inc()
+            self._lat_hist.observe(t_done - item.t_ingest)
+            if item.span is not None and tr is not None:
+                tr.end(item.span, "served", n_detections=len(dets))
+                item.span = None
             self.results.append(FrameResult(
                 index=item.frame.index, detections=dets,
                 t_source=item.frame.t_source, t_ingest=item.t_ingest,
@@ -270,42 +358,46 @@ class StreamingPipeline:
 
     # -- reporting ----------------------------------------------------------
 
-    @staticmethod
-    def _dist_ms(xs: list[float]) -> dict:
-        if not xs:
-            return {"n": 0}
-        a = np.asarray(xs) * 1e3
-        return {"n": len(xs), "mean_ms": float(a.mean()),
-                "p50_ms": float(np.percentile(a, 50)),
-                "p99_ms": float(np.percentile(a, 99)),
-                "max_ms": float(a.max())}
-
     def stats(self) -> dict:
-        served = len(self.results)
-        dropped = sum(self._drops.values())
+        served = self._m_served.value
+        frames_in = self._m_frames_in.value
+        drops = {k: c.value for k, c in sorted(self._m_drops.items())}
+        dropped = sum(drops.values())
         wall = ((self._t_last or 0.0) - (self._t_first or 0.0)
                 if served else 0.0)
         by_reason: dict[str, int] = {}
-        for key, n in self._drops.items():
+        for key, n in drops.items():
             reason = key.split("/", 1)[1]
             by_reason[reason] = by_reason.get(reason, 0) + n
+        accounted = frames_in == served + dropped
+        fps = served / wall if wall > 0 else 0.0
+        self._m_fps.set(fps)
+        lat = self._lat_hist.summary_ms()
         out = {
             "mode": "realtime" if self.realtime else "throughput",
-            "frames_in": self._frames_in,
+            "frames_in": frames_in,
             "frames_served": served,
             "frames_dropped": dropped,
-            "drop_rate": dropped / self._frames_in if self._frames_in else 0.0,
-            "drops_by_stage": dict(sorted(self._drops.items())),
+            "drop_rate": dropped / frames_in if frames_in else 0.0,
+            "drops_by_stage": drops,
             "drops_by_reason": by_reason,
             # the no-silent-loss invariant; CI smoke asserts it
-            "accounted": self._frames_in == served + dropped,
-            "sustained_fps": served / wall if wall > 0 else 0.0,
+            "accounted": accounted,
+            "sustained_fps": fps,
             "detections_total": sum(len(r.detections) for r in self.results),
-            "queue_hwm": dict(self._queue_hwm),
-            "stage": {k: self._dist_ms(v) for k, v in self._stage_s.items()},
-            **{f"latency_{k}": v for k, v in self._dist_ms(
-                [r.latency_s for r in self.results]).items() if k != "n"},
+            "queue_hwm": {k: int(g.hwm)
+                          for k, g in self._queue_gauges.items()},
+            "stage": {k: h.summary_ms()
+                      for k, h in self._stage_hist.items()},
+            **{f"latency_{k}": v for k, v in lat.items() if k != "n"},
         }
+        if not accounted:
+            tr = T.get()
+            if tr is not None:
+                tr.recorder.trip(
+                    "ledger_invariant",
+                    f"pipeline {self._id}: frames_in={frames_in} != "
+                    f"served={served} + dropped={dropped}")
         if hasattr(self.engine, "stats"):
             es = self.engine.stats()
             out["engine"] = es
