@@ -17,8 +17,13 @@ For each serving topology this table:
 
 Topologies: a single continuous-batching `VisionEngine` on the float ref
 and fused fixed-point Pallas substrates (admission bound `max_queue`,
-per-request deadlines), and a 2-replica `ReplicaRouter` under the
-SLO-aware policy (projected-wait dispatch, door shedding).
+per-request deadlines), a 2-replica `ReplicaRouter` under the SLO-aware
+policy (projected-wait dispatch, door shedding), and the disaggregated
+trunk/head fleet (`serving/disagg.DisaggServer`, `disagg_fixed`): trunk
+and head pools with independent replica counts and service floors joined
+by the feature-map cache, replaying 112x112 frame queries over a
+cache-hot pool — its rows land next to the batched engines' so trunk vs
+head scaling shows up in the same goodput columns.
 
 Each row also reports `mfu_load` — MFU under load: the busy-time served
 rate times the deployed per-image model FLOPs (analysis/mfu.py), over the
@@ -62,21 +67,31 @@ FLOOR_MS = 10.0          # per-step service-time floor: a deterministic rate
                          # on real hardware run with --floor-ms 0
 LOADS = {"0.5x": 0.5, "2.0x": 2.0}
 SMOKE_PROCESSES = ("poisson", "bursty")
-# dtype class whose device peak the MFU-under-load column divides by
+# dtype class whose device peak the MFU-under-load column divides by.
+# The disagg topology is deliberately absent: its feature-map cache skips
+# trunk FLOPs on hits, so served-qps x full-model-FLOPs is not the work
+# the device actually did and the MFU identity would overstate it.
 TOPO_BACKEND = {"engine_ref": "ref", "engine_fixed_pallas": "fixed_pallas",
                 "router_slo_x2": "ref"}
+# disagg_fixed fleet shape: trunk/head replica counts scale independently
+DISAGG_TRUNKS = 2
+DISAGG_HEADS = 2
+DISAGG_FRAMES = 32       # distinct 112x112 frames in the query pool; uids
+                         # cycle over them, so steady state is cache-hot
 
 
 def _mfu_under_load(topo: str, stats: dict) -> float | None:
     """Busy-time served qps x deployed per-image model FLOPs / device peak.
-    None when the row carries no throughput (nothing served)."""
+    None when the row carries no throughput (nothing served) or the
+    topology has no single FLOPs-per-query identity (disagg + cache)."""
     from repro.analysis import mfu
 
     qps = stats.get("throughput_qps")
-    if not qps:
+    backend = TOPO_BACKEND.get(topo)
+    if not qps or backend is None:
         return None
     device, _ = mfu.resolve()
-    dtype, word_bytes = mfu.backend_numerics(TOPO_BACKEND[topo])
+    dtype, word_bytes = mfu.backend_numerics(backend)
     flops = mfu.deployed_workload(word_bytes).flops
     return qps * flops / device.peak(dtype)
 
@@ -124,6 +139,63 @@ def _run_engine_row(params, backend: str, gen, images, slo_ms: float,
     return s
 
 
+def _mk_disagg(params, floor_s: float, max_queue: int | None):
+    """The disagg_fixed fleet: trunk replicas carry the heavy-stage floor,
+    head replicas a quarter of it (the paper's stage asymmetry), so with a
+    cache-hot pool the heads are the serialization point and capacity is
+    ~DISAGG_HEADS / (floor_s / 4) by construction."""
+    from repro.serving.disagg import DisaggServer
+
+    return DisaggServer(params, backend="fixed",
+                        n_trunk=DISAGG_TRUNKS, n_head=DISAGG_HEADS,
+                        trunk_floor_s=floor_s, head_floor_s=floor_s / 4,
+                        cache_capacity=DISAGG_FRAMES + 4,
+                        max_queue=max_queue,
+                        n_workers=DISAGG_TRUNKS + DISAGG_HEADS)
+
+
+def _disagg_frames(params):
+    """The disagg query pool: DISAGG_FRAMES distinct seeded 112x112 frames
+    (the server's native geometry — LoadGen's 28x28 images are the batched
+    engines' shape, not a frame)."""
+    from repro.streaming.sources import SyntheticVideoSource
+
+    src = SyntheticVideoSource(n_frames=DISAGG_FRAMES, seed=SEED)
+    return [f.pixels for f in src.frames()]
+
+
+def _calibrate_disagg(params, frame_px, floor_s: float) -> float:
+    """Drain 8 passes over the query pool through a fresh fleet and read
+    the served rate — the engine-calibration idiom for the disagg server
+    (the first pass pays the trunk misses; the other seven amortize them
+    into the cache-hot steady state the replay rows actually run in)."""
+    srv = _mk_disagg(params, floor_s, max_queue=None)
+    srv.start()
+    try:
+        uids = [srv.submit(px) for px in frame_px * 8]
+        srv.wait(uids)
+    finally:
+        srv.stop(drain=True)
+    s = srv.stats()
+    assert s["accounted"] and s["n"] == len(frame_px) * 8
+    return s["n"] / s["wall_s"]
+
+
+def _run_disagg_row(params, gen, frame_px, slo_ms: float,
+                    floor_s: float) -> dict:
+    srv = _mk_disagg(params, floor_s, max_queue=QUEUE_BOUND * BATCH)
+    srv.start()
+    try:
+        gen.replay(lambda a, t: srv.submit(
+            frame_px[a.uid % len(frame_px)], deadline_ms=slo_ms,
+            t_submit=t))
+    finally:
+        srv.stop(drain=True)
+    s = srv.stats()
+    s["queue_bound"] = QUEUE_BOUND * BATCH
+    return s
+
+
 def _run_router_row(params, gen, images, slo_ms: float,
                     floor_s: float) -> dict:
     from repro.serving.router import ReplicaRouter
@@ -157,6 +229,8 @@ def measure(*, processes, n_requests: int, topologies=None,
     # 2 replicas at half batch each: fleet capacity ~= one full-batch engine
     topo_caps["router_slo_x2"] = 2 * _calibrate_engine(params, "ref",
                                                        BATCH // 2, floor_s)
+    frame_px = _disagg_frames(params)
+    topo_caps["disagg_fixed"] = _calibrate_disagg(params, frame_px, floor_s)
     if topologies is not None:
         topo_caps = {k: v for k, v in topo_caps.items() if k in topologies}
 
@@ -168,10 +242,14 @@ def measure(*, processes, n_requests: int, topologies=None,
                 rate = factor * cap
                 gen = LoadGen(process=process, rate_qps=rate,
                               n_requests=n_requests, n_streams=4, seed=SEED)
-                images = gen.images()      # render off the serving clock
-                if topo == "router_slo_x2":
+                if topo == "disagg_fixed":
+                    s = _run_disagg_row(params, gen, frame_px, slo_ms,
+                                        floor_s)
+                elif topo == "router_slo_x2":
+                    images = gen.images()  # render off the serving clock
                     s = _run_router_row(params, gen, images, slo_ms, floor_s)
                 elif topo.startswith("engine_"):
+                    images = gen.images()
                     s = _run_engine_row(params, topo[len("engine_"):],
                                         gen, images, slo_ms, floor_s)
                 else:
@@ -201,6 +279,10 @@ def gate(rows: list[dict]) -> list[str]:
             if not rep["accounted"]:
                 failures.append(f"{tag}: replica-level ledger does not "
                                 f"reconcile: {rep['shed_by_reason']}")
+        for name, st in s.get("per_stage", {}).items():
+            if not st["accounted"]:
+                failures.append(f"{tag}: stage '{name}' ledger does not "
+                                f"reconcile: {st['shed_by_reason']}")
         if "goodput" not in s:
             failures.append(f"{tag}: no goodput reported")
             continue

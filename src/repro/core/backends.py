@@ -356,6 +356,13 @@ class FixedBackend(Backend):
             x[0], p["conv1"]["w"], p["conv1"]["b"],
             p["conv2"]["w"], p["conv2"]["b"], cfg=self.cfg,
             interpret=getattr(self, "interpret", None))
+        # the barrier pins the (4, H/4, W/4) kernel output before it is
+        # split into per-role maps: without it, inlining this call into a
+        # larger traced program lets XLA fuse the slices into the
+        # interpret-mode pallas emulation, which corrupts the corner map's
+        # lane-remainder columns (last W/4 % 8 output cols) whenever the
+        # kernel operands are intermediates rather than program parameters
+        quad = jax.lax.optimization_barrier(quad)
         return tuple(quad[k][None] for k in range(4))
 
 

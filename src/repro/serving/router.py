@@ -14,12 +14,16 @@ Dispatch policies:
   round_robin   rotate over the healthy set
   slo           minimum PROJECTED WAIT — per-replica depth divided by the
                 replica's OBSERVED service rate (`service_rate_qps()`, qps
-                over busy time; cold replicas borrow the fleet median), so
-                a slow replica with a short queue loses to a fast replica
-                with a longer one.  When even the best projected wait
-                exceeds the request's deadline headroom the request is SHED
-                at the door (reason "slo_wait") instead of being queued to
-                blow the p99 — goodput over graveyard latency.
+                over busy time; cold replicas borrow the fleet median, then
+                the deterministic `min_step_s` seed rate, then the fleet
+                median of seeds), so a slow replica with a short queue
+                loses to a fast replica with a longer one.  A replica with
+                NO rate from any source and a full batch already backlogged
+                projects an infinite wait (a cold fleet must door-shed a
+                burst, not queue it into a blown p99).  When even the best
+                projected wait exceeds the request's deadline headroom the
+                request is SHED at the door (reason "slo_wait") instead of
+                being queued — goodput over graveyard latency.
 
 Every request can carry a deadline (default: the router's `slo_ms`); sheds
 — at the router door or inside an engine (admission bound, expired
@@ -142,7 +146,7 @@ class ReplicaRouter:
         self._deadline_ok = 0
         self._idle_ticks = 0
         self._next_uid = 0
-        self._rr_clock = 0
+        self._rr_last = -1            # last-dispatched STABLE replica id
         self._thread: threading.Thread | None = None
         self._stop_flag = False
         # reentrant condition: _pick (under the submit lock) reads
@@ -176,21 +180,61 @@ class ReplicaRouter:
             return [len(self._pending[i]) + self.replicas[i].load()
                     for i in range(len(self.replicas))]
 
-    def _projected_waits(self, healthy: list[int]) -> dict[int, float]:
+    def _load_snapshot(self, healthy: list[int]
+                       ) -> dict[int, tuple[int, float | None,
+                                            float | None, int]]:
+        """ONE consistent read of every dispatch signal, taken under the
+        router lock: replica -> (depth, observed rate, seed rate,
+        batch_size).  The slo pick derives both the wait map and its depth
+        tiebreaker from this single snapshot — reading them in two separate
+        locked passes let a concurrent submit land between the reads, so
+        the wait map and the tiebreaker could describe different fleets
+        mid-pick."""
+        with self._lock:
+            return {i: (len(self._pending[i]) + self.replicas[i].load(),
+                        self.replicas[i].service_rate_qps(),
+                        self.replicas[i].seed_rate_qps(),
+                        self.replicas[i].batch_size)
+                    for i in healthy}
+
+    @staticmethod
+    def _projected_waits_from(snapshot: dict[int, tuple[int, float | None,
+                                                        float | None, int]]
+                              ) -> dict[int, float]:
         """Seconds until a request dispatched NOW would be served, per
-        replica: depth / observed service rate.  Replicas with no serving
-        history borrow the fleet median rate; a fully-cold fleet projects
-        0.0 everywhere (optimistic — traffic establishes the rates)."""
-        depths = {i: len(self._pending[i]) + self.replicas[i].load()
-                  for i in healthy}
-        rates = {i: self.replicas[i].service_rate_qps() for i in healthy}
-        known = [r for r in rates.values() if r]
-        fallback = float(np.median(known)) if known else None
+        replica: depth / service rate, as a pure function of one load
+        snapshot (deterministic given frozen inputs — tested as such).
+
+        Rate fallback chain, most- to least-informed:
+          1. the replica's OBSERVED rate (qps over busy time),
+          2. the fleet median of observed rates,
+          3. the replica's deterministic seed rate (`seed_rate_qps()`: the
+             min_step_s capacity floor, known before any traffic),
+          4. the fleet median of seed rates.
+        A replica with no rate from ANY source projects an INFINITE wait
+        once a full batch is already pending on it (depth >= batch_size) —
+        the pessimistic reading of "a whole wave is backlogged and there is
+        no evidence anybody serves it".  That lets the slo door shed during
+        a cold-start burst instead of projecting 0.0 and queueing
+        everything into a blown p99 (the cold-fleet SLO hole).  Below one
+        batch the wait stays 0.0: a cold replica absorbs its first wave in
+        a single step, and serving it is exactly what establishes the
+        observed rate."""
+        observed = [r for _, r, _, _ in snapshot.values() if r]
+        med_obs = float(np.median(observed)) if observed else None
+        seeds = [s for _, _, s, _ in snapshot.values() if s]
+        med_seed = float(np.median(seeds)) if seeds else None
         waits = {}
-        for i in healthy:
-            rate = rates[i] or fallback
-            waits[i] = depths[i] / rate if rate else 0.0
+        for i, (depth, obs, seed, batch) in snapshot.items():
+            rate = obs or med_obs or seed or med_seed
+            if rate:
+                waits[i] = depth / rate
+            else:
+                waits[i] = float("inf") if depth >= max(batch, 1) else 0.0
         return waits
+
+    def _projected_waits(self, healthy: list[int]) -> dict[int, float]:
+        return self._projected_waits_from(self._load_snapshot(healthy))
 
     def _pick(self, deadline_ms: float | None = None
               ) -> tuple[int, str | None]:
@@ -202,15 +246,22 @@ class ReplicaRouter:
                 f"all {len(self.replicas)} replicas have failed or retired: "
                 f"{ {i: repr(e) for i, e in self._errors.items()} }")
         if self.policy == "round_robin":
-            i = healthy[self._rr_clock % len(healthy)]
-            self._rr_clock += 1
+            # rotate over STABLE replica ids, not positions in the healthy
+            # list: `clock % len(healthy)` re-aliases every time the healthy
+            # set churns (failover, autoscale spawn/retire), double-hitting
+            # one replica while starving another.  Advancing to the next
+            # healthy id past the last-dispatched one is churn-proof — ids
+            # never move.
+            nxt = [i for i in healthy if i > self._rr_last]
+            i = nxt[0] if nxt else healthy[0]
+            self._rr_last = i
             return i, None
         if self.policy == "least_loaded":
             depths = self.queue_depths()
             return min(healthy, key=lambda i: depths[i]), None
-        waits = self._projected_waits(healthy)
-        depths = self.queue_depths()
-        i = min(healthy, key=lambda j: (waits[j], depths[j]))
+        snapshot = self._load_snapshot(healthy)
+        waits = self._projected_waits_from(snapshot)
+        i = min(healthy, key=lambda j: (waits[j], snapshot[j][0]))
         if (deadline_ms is not None
                 and waits[i] * 1e3 > deadline_ms * self.shed_headroom):
             return i, "slo_wait"

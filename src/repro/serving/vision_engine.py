@@ -604,6 +604,17 @@ class VisionEngine:
                 return None
             return self._m_served.value / self._m_busy.value
 
+    def seed_rate_qps(self) -> float | None:
+        """Deterministic service-rate bound available BEFORE any serving
+        history: the `min_step_s` floor admits at most one batch per floor
+        period, so capacity is batch_size / min_step_s.  None when no floor
+        is configured.  This is the router's cold-start dispatch signal —
+        without it a cold fleet projects 0.0 wait for any backlog and the
+        slo door never sheds (the cold-fleet SLO hole)."""
+        if self.min_step_s > 0.0:
+            return self.batch_size / self.min_step_s
+        return None
+
     def stats(self) -> dict:
         """Per-request latency distribution + engine throughput + the
         admission ledger (submitted == served + shed + pending), read back

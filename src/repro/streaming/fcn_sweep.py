@@ -211,13 +211,12 @@ def _check_saturation(be: B.Backend) -> None:
             "registered 'fixed'/'fixed_pallas' backends use wraparound mode.")
 
 
-@functools.lru_cache(maxsize=64)
-def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
-              positions: tuple[tuple[int, int], ...],
-              megakernel: bool | None = None):
-    """Jitted whole-sweep function for one (backend, geometry): params +
-    (1,H,W,1) float frame -> (n_windows, 10) backend-native scores, ONE
-    device call per frame."""
+def _window_gather(patch: int, positions: tuple[tuple[int, int], ...]):
+    """Static gather indices + role masks for scoring `positions` from a
+    pooled role-map quad: (rows, cols, is_last_row, is_last_col), where
+    rows/cols are (Nw, k, 1)/(Nw, 1, k) pooled-lattice indices and the
+    masks flag each window feature's last pooled row/col (the role that
+    decides which quad map supplies it)."""
     k = patch // _POOL
     gy = jnp.asarray([y // _POOL for y, _ in positions])
     gx = jnp.asarray([x // _POOL for _, x in positions])
@@ -226,18 +225,75 @@ def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
     cols = gx[:, None, None] + off[None, None, :]        # (Nw, 1, k)
     is_last_row = (off == k - 1)[None, :, None]
     is_last_col = (off == k - 1)[None, None, :]
+    return rows, cols, is_last_row, is_last_col
+
+
+def _head_scores(be: B.Backend, p: dict, quad, gather, n_windows: int):
+    """The sweep's dense-head half as traced code: role-map quad + static
+    gather -> (Nw, 10) backend-native scores.  Shared verbatim by the
+    monolithic `_sweep_fn` and the disaggregated head program
+    (`make_head_fn`), so splitting the sweep across engine pools cannot
+    change a single word on the integer substrates."""
+    rows, cols, is_last_row, is_last_col = gather
+    I2, B2, R2, C2 = (_squeeze_map(m) for m in quad)
+    feats = jnp.where(
+        is_last_row & is_last_col, C2[rows, cols],
+        jnp.where(is_last_row, B2[rows, cols],
+                  jnp.where(is_last_col, R2[rows, cols],
+                            I2[rows, cols])))            # (Nw, k, k)
+    return smallnet.dense_head(p, feats.reshape(n_windows, -1), backend=be)
+
+
+@functools.lru_cache(maxsize=64)
+def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
+              positions: tuple[tuple[int, int], ...],
+              megakernel: bool | None = None):
+    """Jitted whole-sweep function for one (backend, geometry): params +
+    (1,H,W,1) float frame -> (n_windows, 10) backend-native scores, ONE
+    device call per frame."""
+    gather = _window_gather(patch, positions)
 
     def run(params, frame):
         p = be.prepare_params(params)
-        I2, B2, R2, C2 = (_squeeze_map(m)
-                          for m in _trunk_quad(be, p, frame, megakernel))
-        feats = jnp.where(
-            is_last_row & is_last_col, C2[rows, cols],
-            jnp.where(is_last_row, B2[rows, cols],
-                      jnp.where(is_last_col, R2[rows, cols],
-                                I2[rows, cols])))        # (Nw, k, k)
-        return smallnet.dense_head(p, feats.reshape(len(positions), -1),
-                                   backend=be)
+        quad = _trunk_quad(be, p, frame, megakernel)
+        return _head_scores(be, p, quad, gather, len(positions))
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=32)
+def make_trunk_fn(backend: str, megakernel: bool | None = None):
+    """Jitted TRUNK half of the sweep for a registered backend: (params,
+    (1,H,W,1) float frame) -> the level-2 role-map quad (I, B, R, C) in
+    the backend's native domain.  This is the heavy per-frame stage the
+    disaggregated serving layer (`serving/disagg.py`) runs on its trunk
+    pool and caches per frame digest; `make_head_fn` scores windows from
+    the result.  `megakernel` routes as in `_trunk_quad`."""
+    be = B.get_backend(backend)
+    _check_saturation(be)
+
+    def run(params, frames):
+        p = be.prepare_params(params)
+        return _trunk_quad(be, p, frames, megakernel)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=64)
+def make_head_fn(backend: str, patch: int,
+                 positions: tuple[tuple[int, int], ...]):
+    """Jitted HEAD half of the sweep: (params, role-map quad) -> (Nw, 10)
+    backend-native window scores for a fixed window lattice.  Runs the
+    SAME traced gather + dense head as the monolithic `_sweep_fn`
+    (`_head_scores`), so head-pool scores from a cached feature quad are
+    int32 word-exact vs the one-call sweep on the fixed substrates."""
+    be = B.get_backend(backend)
+    _check_saturation(be)
+    gather = _window_gather(patch, positions)
+
+    def run(params, quad):
+        p = be.prepare_params(params)
+        return _head_scores(be, p, quad, gather, len(positions))
 
     return jax.jit(run)
 
@@ -245,6 +301,8 @@ def _sweep_fn(be: B.Backend, frame_shape: tuple[int, int], patch: int,
 # flipping the process-wide interpret switch must drop programs compiled
 # under the old mode (core/runtime.py documents the staleness hazard)
 runtime.register_reset_hook(_sweep_fn.cache_clear)
+runtime.register_reset_hook(make_trunk_fn.cache_clear)
+runtime.register_reset_hook(make_head_fn.cache_clear)
 
 
 def sweep_feature_maps(params: Any, frame: np.ndarray | jnp.ndarray, *,

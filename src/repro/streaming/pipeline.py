@@ -127,7 +127,14 @@ class StreamingPipeline:
                 "sweep mode scores whole frames through the engine's model, "
                 f"but {type(engine).__name__} exposes no params/backend "
                 "(use a VisionEngine, or any object with .params/.backend)")
-        if self.sweep and hasattr(source, "frame_shape"):
+        # disaggregated engines (serving/disagg.DisaggServer) score whole
+        # frames through their own trunk/head pools instead of the tiler's
+        # monolithic sweep program; they also compile both halves at
+        # construction, so the pipeline-side warmup is theirs to skip
+        self._disagg = self.sweep and callable(getattr(engine,
+                                                       "score_frame", None))
+        if self.sweep and not self._disagg \
+                and hasattr(source, "frame_shape"):
             # compile the whole-frame sweep program BEFORE the clip starts
             # (the VisionEngine warmup idiom): a multi-second first-frame
             # trace would otherwise blow every deadline in realtime mode
@@ -273,6 +280,18 @@ class StreamingPipeline:
         over an unbounded clip.  Returns None when the engine shed any of
         the frame's tiles — a partially-scored frame is a dropped frame."""
         eng = self.engine
+        if self._disagg:
+            try:
+                if item.span is not None:
+                    return eng.score_frame(item.tiles, parent_span=item.span)
+                return eng.score_frame(item.tiles)
+            except Exception as e:    # noqa: BLE001 — sheds carry .reason
+                # a DisaggShedError (queue_depth / deadline / fault after
+                # failover) is the fleet declining the frame, not a bug:
+                # surface it as a dropped frame like an engine shed
+                if hasattr(e, "reason"):
+                    return None
+                raise
         if self.sweep:
             return self.tiler.score(eng.params, item.tiles,
                                     backend=eng.backend)
@@ -297,7 +316,9 @@ class StreamingPipeline:
                 continue
             t0 = time.perf_counter()
             child = (tr.start("infer", item.span.trace_id, parent=item.span,
-                              route="sweep" if self.sweep else "engine")
+                              route=("disagg" if self._disagg
+                                     else "sweep" if self.sweep
+                                     else "engine"))
                      if tr is not None and item.span is not None else None)
             item.scores = await loop.run_in_executor(
                 None, self._serve_wave, item)

@@ -191,7 +191,11 @@ def test_slo_router_sheds_instead_of_blowing_p99(vision_setup):
         r = ReplicaRouter.from_backends(params, ["ref"], batch_size=8,
                                         warmup=False, policy=policy, **kw)
         r.replicas[0]._step_fn = _slow_step(8, 0.010)
-        r.serve([img] * 16)                          # establish service rate
+        # establish the observed service rate with ONE batch: a cold slo
+        # fleet with no rate evidence door-sheds anything beyond a full
+        # batch of backlog (the cold-fleet SLO fix in router._projected_
+        # waits_from), so a 2-batch warmup would itself shed
+        r.serve([img] * 8)
         return r
 
     ll = mk("least_loaded")

@@ -1,0 +1,208 @@
+"""Router dispatch regressions: the cold-fleet SLO hole, round-robin
+re-aliasing under healthy-set churn, and the torn slo pick snapshot.
+
+Each test here was red against the pre-fix router:
+
+  * `_projected_waits` projected 0.0 wait for every replica when the fleet
+    had no serving history — even with an arbitrarily deep backlog — so the
+    slo door never shed during a cold-start burst.
+  * round_robin indexed `clock % len(healthy)`: when the healthy set
+    churned (failover, autoscale spawn/retire) the rotation re-aliased,
+    double-dispatching to one replica while starving another.
+  * the slo policy read the wait map and the depth tiebreaker in two
+    separately-locked passes, so a concurrent submit landing between them
+    made the pick inconsistent with either view of the fleet.
+"""
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import smallnet
+from repro.serving.router import ReplicaRouter
+from repro.serving.vision_engine import VisionEngine
+
+
+@pytest.fixture(scope="module")
+def params():
+    return smallnet.init_params(jax.random.key(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("backend", "ref")
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("warmup", False)
+    return VisionEngine(params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. cold-fleet SLO hole
+# ---------------------------------------------------------------------------
+
+
+def test_seed_rate_comes_from_min_step_floor(params):
+    eng = _engine(params, batch_size=4, min_step_s=0.05)
+    assert eng.service_rate_qps() is None        # no history yet
+    assert eng.seed_rate_qps() == pytest.approx(80.0)   # 4 / 0.05
+    assert _engine(params).seed_rate_qps() is None      # no floor, no seed
+
+
+def test_cold_fleet_slo_door_sheds_on_burst(params):
+    """2x-capacity burst at a COLD fleet (no serving history anywhere):
+    the slo door must shed.  Pre-fix, every projected wait was 0.0 and all
+    40 requests were queued toward a blown p99."""
+    # two replicas, min_step_s floor: deterministic capacity 20 qps each,
+    # so a 100 ms SLO tolerates a depth of 2 per replica (wait = depth/20)
+    router = ReplicaRouter(
+        [_engine(params, min_step_s=0.05) for _ in range(2)],
+        policy="slo", slo_ms=100.0)
+    uids = [router.submit(np.zeros((28, 28, 1), np.float32))
+            for _ in range(40)]
+    shed = router.pop_shed(uids)
+    st = router.stats()
+    assert st["n"] == 0                          # nothing served: still cold
+    assert shed, "cold fleet admitted a 2x-capacity burst without shedding"
+    assert set(shed.values()) == {"slo_wait"}
+    # the door opened for what the fleet CAN plausibly serve (depth <= 2
+    # per replica within the 100 ms budget), and shed the rest
+    admitted = len(uids) - len(shed)
+    assert 2 <= admitted <= 8
+    assert st["accounted"]
+
+
+def test_cold_fleet_unknown_rate_with_backlog_is_pessimistic(params):
+    """No floor, no history: an idle replica projects 0.0 (serve now), but
+    ANY backlog with no rate evidence projects an infinite wait — the door
+    sheds instead of betting the deadline on an unknowable rate."""
+    router = ReplicaRouter([_engine(params)], policy="slo", slo_ms=50.0)
+    img = np.zeros((28, 28, 1), np.float32)
+    first = router.submit(img)                   # depth 0: admitted
+    second = router.submit(img)                  # depth 1, rate unknown
+    shed = router.pop_shed([first, second])
+    assert first not in shed
+    assert shed.get(second) == "slo_wait"
+
+
+# ---------------------------------------------------------------------------
+# 2. round-robin re-aliasing under churn
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_no_double_dispatch_on_failover(params):
+    """Deterministic red-before case: after serving replica 2, replica 0
+    fails.  The modular clock re-aliased (clock=3, healthy=[1,2], 3%2=1)
+    and dispatched to 2 AGAIN, starving 1; stable-id rotation advances to
+    the next surviving id."""
+    router = ReplicaRouter([_engine(params) for _ in range(3)],
+                           policy="round_robin")
+    assert [router._pick()[0] for _ in range(3)] == [0, 1, 2]
+    router._errors[0] = RuntimeError("replica 0 died")
+    assert router._pick()[0] == 1                # pre-fix: 2 (double hit)
+    assert router._pick()[0] == 2
+
+
+def test_round_robin_near_uniform_under_spawn_retire_churn(params):
+    """Scripted churn — fail, retire, spawn — with dispatch counts per
+    phase: rotation over stable ids keeps every phase near-uniform (max
+    and min counts within 1) and never picks the same replica twice in a
+    row while siblings are healthy."""
+    router = ReplicaRouter([_engine(params) for _ in range(3)],
+                           policy="round_robin")
+    phases = []
+
+    def run_phase(n_picks):
+        counts = collections.Counter(router._pick()[0]
+                                     for _ in range(n_picks))
+        phases.append(counts)
+
+    run_phase(7)                                 # [0, 1, 2]
+    router._errors[1] = RuntimeError("fault")    # failover churn
+    run_phase(8)                                 # [0, 2]
+    router.replicas.append(_engine(params))      # autoscale spawn
+    router._pending.append([])
+    router._served_by.setdefault(3, 0)
+    run_phase(9)                                 # [0, 2, 3]
+    router._retired.add(0)                       # autoscale retire
+    run_phase(8)                                 # [2, 3]
+    for counts in phases:
+        assert max(counts.values()) - min(counts.values()) <= 1, phases
+    # churn boundaries included: no consecutive double-dispatch anywhere
+    picks = [router._pick()[0] for _ in range(6)]
+    assert all(a != b for a, b in zip(picks, picks[1:]))
+
+
+# ---------------------------------------------------------------------------
+# 3. torn slo pick snapshot
+# ---------------------------------------------------------------------------
+
+
+class _ShiftyReplica:
+    """Stand-in replica whose load() changes between successive reads —
+    the situation a concurrent submit creates.  Counts its reads so the
+    test can pin 'exactly one consistent snapshot per pick'."""
+
+    def __init__(self, loads, rate):
+        self._loads = list(loads)
+        self._rate = rate
+        self.load_calls = 0
+        self.batch_size = 8
+
+    def load(self):
+        self.load_calls += 1
+        return self._loads.pop(0) if len(self._loads) > 1 \
+            else self._loads[0]
+
+    def service_rate_qps(self):
+        return self._rate
+
+    def seed_rate_qps(self):
+        return None
+
+
+def test_slo_pick_reads_one_snapshot(params):
+    """Equal projected waits tiebreak on depth.  Pre-fix the tiebreaker
+    re-read queue_depths() under a second lock acquisition; with replica
+    0's load shifting 0 -> 100 between the reads, the pick flipped to
+    replica 1 — disagreeing with the wait map it had just computed.  One
+    snapshot means one load() read per replica and a pick consistent with
+    that frozen view."""
+    shifty = _ShiftyReplica(loads=[0, 100], rate=50.0)
+    steady = _ShiftyReplica(loads=[0], rate=50.0)
+    router = ReplicaRouter([shifty, steady], policy="slo", slo_ms=100.0)
+    i, shed = router._pick(100.0)
+    assert shed is None
+    assert i == 0                                # pre-fix: 1
+    assert shifty.load_calls == 1
+    assert steady.load_calls == 1
+
+
+def test_projected_waits_pure_given_frozen_snapshot():
+    """The wait map is a pure function of one snapshot: deterministic on
+    replay, pessimistic (inf) only for backlogged replicas with no rate
+    from any source, and 0.0 for idle unknowns."""
+    snapshot = {0: (4, 50.0, None, 8),           # observed rate
+                1: (4, None, 25.0, 8),           # seed rate only
+                2: (0, None, None, 8),           # idle, unknown rate
+                3: (9, None, None, 8)}           # backlogged, unknown rate
+    waits = ReplicaRouter._projected_waits_from(snapshot)
+    assert waits == ReplicaRouter._projected_waits_from(dict(snapshot))
+    assert waits[0] == pytest.approx(4 / 50.0)
+    # replicas without their own observation borrow the fleet-median
+    # observed rate (preferred over replica 1's own seed: real traffic
+    # beats the configured floor)
+    assert waits[1] == pytest.approx(4 / 50.0)
+    assert waits[2] == 0.0
+    assert waits[3] == pytest.approx(9 / 50.0)
+    # with no observed rates anywhere, seeds take over
+    waits = ReplicaRouter._projected_waits_from(
+        {0: (4, None, 25.0, 8), 1: (2, None, None, 8)})
+    assert waits[0] == pytest.approx(4 / 25.0)
+    assert waits[1] == pytest.approx(2 / 25.0)   # fleet-median seed
+    # pessimistic inf ONLY when no rate exists from ANY source fleet-wide
+    # AND a full batch is already backlogged; a sub-batch cold queue is
+    # absorbed by the first step (that step establishes the rate)
+    waits = ReplicaRouter._projected_waits_from(
+        {0: (8, None, None, 8), 1: (7, None, None, 8)})
+    assert waits[0] == float("inf")
+    assert waits[1] == 0.0
